@@ -1,0 +1,157 @@
+"""Figure 2 / Figure 3 / Figure 4 reproduction: the privacy/utility
+trade-off on linear classification.
+
+(a) objective along iterations under a fixed budget, constant init —
+    the U-shaped "more iterations => more noise" behaviour;
+(b) same with the private warm start (Supp. C);
+(c) final test accuracy vs dimension p for several privacy budgets,
+    against the purely-local baseline;
+(fig3) accuracy improvement split by local dataset size;
+(fig4) the local-DP (perturb-the-data) baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import (
+    DPConfig,
+    make_objective,
+    perturb_dataset,
+    private_warm_start,
+    run_private,
+    run_scan,
+    train_local_models,
+)
+from repro.core.objective import LOGISTIC
+from repro.data.synthetic import eval_accuracy, linear_classification_problem
+
+
+def _local_models(prob):
+    return train_local_models(
+        prob.train, LOGISTIC, 1.0 / np.maximum(prob.train.num_examples, 1.0)
+    )
+
+
+def fig2a_b(n=100, p=100, eps=0.55, T=1000, mu=0.3, seed=0, record_every=20, verbose=True):
+    prob = linear_classification_problem(n=n, p=p, seed=seed)
+    obj = make_objective(prob.graph, prob.train, "logistic", mu=mu, clip=1.0)
+    rng = np.random.default_rng(seed)
+    const_init = np.ones((n, p))
+    warm = private_warm_start(obj, eps_warm=0.05 * 10, rng=rng)  # eps=0.5 warm
+    cfg = DPConfig(eps_bar=eps)
+    r_const = run_private(obj, const_init, T=T, cfg=cfg, rng=np.random.default_rng(seed + 1),
+                          record_every=record_every)
+    r_warm = run_private(obj, warm, T=T, cfg=cfg, rng=np.random.default_rng(seed + 2),
+                         record_every=record_every)
+    out = {
+        "const_objective": r_const.objective.tolist(),
+        "warm_objective": r_warm.objective.tolist(),
+        "acc_const": float(eval_accuracy(r_const.Theta, prob.test).mean()),
+        "acc_warm": float(eval_accuracy(r_warm.Theta, prob.test).mean()),
+        "warm_start_obj": float(obj.value(warm.astype(np.float64))),
+        "const_init_obj": float(obj.value(const_init)),
+    }
+    if verbose:
+        print(f"[fig2ab] const init: obj {out['const_init_obj']:.1f} -> min "
+              f"{min(r_const.objective):.1f}, acc {out['acc_const']:.3f}")
+        print(f"[fig2ab] warm  init: obj {out['warm_start_obj']:.1f} -> min "
+              f"{min(r_warm.objective):.1f}, acc {out['acc_warm']:.3f}")
+    return out
+
+
+def fig2c_fig3(n=100, dims=(10, 50, 100), eps_list=(0.1, 0.5, 1.0), T_per_agent=None,
+               mu=0.3, seed=0, verbose=True, tick_grid=(1, 2, 5, 10)):
+    rows = []
+    fig3 = None
+    for p in dims:
+        prob = linear_classification_problem(n=n, p=p, seed=seed + p)
+        obj = make_objective(prob.graph, prob.train, "logistic", mu=mu, clip=1.0)
+        theta_loc = _local_models(prob)
+        acc_loc = eval_accuracy(theta_loc, prob.test)
+        rng = np.random.default_rng(seed)
+        nonpriv = run_scan(obj, theta_loc, T=20 * n, rng=rng, record_objective=False)
+        acc_np = eval_accuracy(nonpriv.Theta, prob.test)
+        row = {"p": p, "acc_local": float(acc_loc.mean()), "acc_nonprivate": float(acc_np.mean())}
+        # Paper protocol: "the number of iterations per node was tuned based
+        # on a validation set of random problem instances".
+        val_prob = linear_classification_problem(n=n, p=p, seed=seed + p + 10_000)
+        val_obj = make_objective(val_prob.graph, val_prob.train, "logistic", mu=mu, clip=1.0)
+        val_loc = _local_models(val_prob)
+        for eps in eps_list:
+            if T_per_agent is None:
+                best = (tick_grid[0], -1.0)
+                for ticks in tick_grid:
+                    vw = private_warm_start(val_obj, eps_warm=0.5,
+                                            rng=np.random.default_rng(seed + 7))
+                    vr = run_private(val_obj, vw, T=ticks * n, cfg=DPConfig(eps_bar=eps),
+                                     rng=np.random.default_rng(seed + 8),
+                                     record_objective=False)
+                    a = float(eval_accuracy(vr.Theta, val_prob.test).mean())
+                    if a > best[1]:
+                        best = (ticks, a)
+                ticks = best[0]
+            else:
+                ticks = T_per_agent
+            warm = private_warm_start(obj, eps_warm=0.5, rng=np.random.default_rng(seed + 3))
+            r = run_private(obj, warm, T=ticks * n, cfg=DPConfig(eps_bar=eps),
+                            rng=np.random.default_rng(seed + 4), record_objective=False)
+            acc = eval_accuracy(r.Theta, prob.test)
+            row[f"acc_eps_{eps}"] = float(acc.mean())
+            row[f"ticks_eps_{eps}"] = ticks
+            if p == max(dims) and eps == eps_list[-1]:
+                # Fig 3: improvement by dataset size (largest dim, largest eps)
+                m = prob.train.num_examples
+                small = m <= np.median(m)
+                fig3 = {
+                    "acc_local_small_m": float(acc_loc[small].mean()),
+                    "acc_priv_small_m": float(acc[small].mean()),
+                    "acc_local_large_m": float(acc_loc[~small].mean()),
+                    "acc_priv_large_m": float(acc[~small].mean()),
+                }
+        rows.append(row)
+        if verbose:
+            print(f"[fig2c] p={p}: " + " ".join(f"{k}={v:.3f}" for k, v in row.items() if k != "p"))
+    if verbose and fig3:
+        print(f"[fig3] small-m agents: local {fig3['acc_local_small_m']:.3f} -> "
+              f"private {fig3['acc_priv_small_m']:.3f}; large-m: "
+              f"{fig3['acc_local_large_m']:.3f} -> {fig3['acc_priv_large_m']:.3f}")
+    return rows, fig3
+
+
+def fig4_local_dp(n=100, p=50, eps_list=(1.0, 5.0), mu=0.3, seed=0, verbose=True):
+    prob = linear_classification_problem(n=n, p=p, seed=seed)
+    theta_loc = _local_models(prob)
+    acc_clean = eval_accuracy(theta_loc, prob.test).mean()
+    rows = []
+    for eps in eps_list:
+        pert = perturb_dataset(prob.train, eps=eps, rng=np.random.default_rng(seed))
+        theta_dp = train_local_models(
+            pert, LOGISTIC, 1.0 / np.maximum(pert.num_examples, 1.0)
+        )
+        acc = eval_accuracy(theta_dp, prob.test).mean()
+        rows.append({"eps": eps, "acc_local_dp": float(acc)})
+        if verbose:
+            print(f"[fig4] local-DP eps={eps}: acc {acc:.3f} (clean local {acc_clean:.3f})")
+    return {"acc_local_clean": float(acc_clean), "rows": rows}
+
+
+def run(out=None, fast=False, verbose=True):
+    t0 = time.time()
+    kw = dict(n=30, p=20, T=200) if fast else {}
+    ab = fig2a_b(verbose=verbose, **({"n": 30, "p": 20, "T": 200} if fast else {}))
+    c, f3 = fig2c_fig3(verbose=verbose, **({"n": 30, "dims": (10, 20), "T_per_agent": 5} if fast else {}))
+    f4 = fig4_local_dp(verbose=verbose, **({"n": 30, "p": 20} if fast else {}))
+    result = {"name": "fig2_privacy_utility", "fig2ab": ab, "fig2c": c, "fig3": f3,
+              "fig4": f4, "elapsed_s": round(time.time() - t0, 1)}
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f)
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""Benchmark entry point — one bench per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast mode (CI-sized)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale
+
+Prints ``name,us_per_call,derived`` CSV lines per bench plus per-table
+summaries; paper-scale results land in results/*.json and EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig1", "fig2", "table1", "kernels", "roofline",
+                             "ablations"])
+    args = ap.parse_args(argv)
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)  # paper-core benches need f64
+
+    from benchmarks import (
+        bench_ablations,
+        bench_cd_vs_admm,
+        bench_kernels,
+        bench_movielens,
+        bench_privacy_utility,
+        bench_roofline,
+    )
+
+    os.makedirs("results", exist_ok=True)
+    rows = []
+
+    def record(name, t0, derived):
+        us = (time.time() - t0) * 1e6
+        rows.append((name, us, derived))
+        print(f"{name},{us:.0f},{derived}")
+
+    if args.only in (None, "fig1"):
+        t0 = time.time()
+        kw = {} if args.full else dict(n=30, p=20, T_cd=800, T_admm=80)
+        r = bench_cd_vs_admm.run(out="results/fig1_cd_vs_admm.json", **kw)
+        record("fig1_cd_vs_admm", t0,
+               f"cd_beats_admm_per_message={r['cd_beats_admm_per_message']}")
+
+    if args.only in (None, "fig2"):
+        t0 = time.time()
+        r = bench_privacy_utility.run(out="results/fig2_privacy_utility.json",
+                                      fast=not args.full)
+        acc = r["fig2c"][-1]
+        record("fig2_privacy_utility", t0,
+               f"acc_local={acc['acc_local']:.3f},acc_nonpriv={acc['acc_nonprivate']:.3f}")
+
+    if args.only in (None, "table1"):
+        t0 = time.time()
+        r = bench_movielens.run(out="results/table1_movielens_fastmode.json",
+                                fast=not args.full)
+        record("table1_movielens", t0,
+               f"rmse_local={r['rmse_local']:.3f},rmse_cd={r['rmse_cd']:.3f}")
+
+    if args.only in (None, "ablations"):
+        t0 = time.time()
+        r = bench_ablations.run(out="results/ablations.json", fast=not args.full)
+        record("ablations", t0,
+               f"personalized={r['personalization']['acc_personalized']:.3f},"
+               f"global={r['personalization']['acc_global']:.3f}")
+
+    if args.only in (None, "kernels"):
+        t0 = time.time()
+        ks = bench_kernels.run()
+        record("kernels", t0, f"{len(ks)} kernels timed")
+
+    if args.only in (None, "roofline"):
+        t0 = time.time()
+        rs = bench_roofline.run()
+        record("roofline", t0, f"{len(rs)} dry-run rows")
+
+    with open("results/bench_summary.json", "w") as f:
+        json.dump([{"name": n, "us": u, "derived": d} for n, u, d in rows], f)
+
+
+if __name__ == "__main__":
+    main()

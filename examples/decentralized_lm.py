@@ -1,0 +1,66 @@
+"""End-to-end driver (deliverable b): train a ~100M-param transformer with
+the paper's P2P-DP update — personal models per agent, Laplace-perturbed
+local gradients, ppermute gossip — for a few hundred steps.
+
+    PYTHONPATH=src python examples/decentralized_lm.py                # ~25M, quick
+    PYTHONPATH=src python examples/decentralized_lm.py --hundred-m    # ~100M params
+
+On CPU the 100M variant takes a while; the default is sized to finish in a
+few minutes while exercising exactly the same code path as the TPU run
+(repro.launch.train). Personalization signal: each agent's token stream has
+its own unigram distribution, so gossip + local steps must balance.
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, ".")
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--eps", type=float, default=0.0, help="DP budget (0 = off)")
+    args = ap.parse_args()
+
+    if args.hundred_m:
+        # ~100M params: 8 layers x d=768 x ff=3072, 32k vocab.
+        argv = [
+            "--arch", "llama3.2-1b", "--preset", "small", "--steps",
+            str(args.steps or 200), "--batch", "2", "--seq", "129",
+            "--mu", "0.5", "--alpha", "0.9", "--mesh", "1x1",
+        ]
+        import repro.configs.base as base
+        # widen the 'small' preset to ~100M via explicit overrides
+        orig = train_mod.build
+
+        def build_100m(a):
+            from repro.configs import get_reduced
+
+            return get_reduced(
+                "llama3.2-1b", num_layers=8, d_model=768, num_heads=12,
+                num_kv_heads=4, d_ff=3072, vocab_size=32768, head_dim=64,
+                dtype="float32",
+            )
+
+        train_mod.build = build_100m
+    else:
+        argv = [
+            "--arch", "llama3.2-1b", "--preset", "small", "--steps",
+            str(args.steps or 60), "--batch", "2", "--seq", "129",
+            "--mu", "0.5", "--alpha", "0.9", "--mesh", "1x1",
+        ]
+    if args.eps > 0:
+        argv += ["--eps", str(args.eps)]
+    argv += ["--checkpoint-dir", "results/decentralized_lm_ckpt"]
+    history = train_mod.main(argv)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} ({'improved' if last < first else 'NO DESCENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Table-1 experiment: private P2P recommendation on the MovieLens-100K twin.
+
+Each of 943 users keeps their ratings on-device; collaboration happens only
+through DP-perturbed model broadcasts over a 10-NN similarity graph.
+
+    PYTHONPATH=src python examples/movielens_recommendation.py [--full]
+"""
+
+import argparse
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, ".")
+
+from benchmarks import bench_movielens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="all 943 users")
+    args = ap.parse_args()
+    bench_movielens.run(fast=not args.full)
+
+
+if __name__ == "__main__":
+    main()

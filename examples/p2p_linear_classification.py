@@ -1,0 +1,37 @@
+"""Full Sec.-5.1 experiment: CD vs ADMM (Fig. 1) + privacy sweep (Fig. 2).
+
+    PYTHONPATH=src python examples/p2p_linear_classification.py [--full]
+
+Fast mode uses n=30 agents / p=20 dims; --full matches the paper (n=100,
+p=100) and takes considerably longer on CPU.
+"""
+
+import argparse
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, ".")
+
+from benchmarks import bench_cd_vs_admm, bench_privacy_utility
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    print("=== Fig. 1: coordinate descent vs gossip ADMM ===")
+    if args.full:
+        bench_cd_vs_admm.run()
+    else:
+        bench_cd_vs_admm.run(n=30, p=20, T_cd=800, T_admm=80)
+
+    print("\n=== Fig. 2-4: privacy/utility trade-off ===")
+    bench_privacy_utility.run(fast=not args.full)
+
+
+if __name__ == "__main__":
+    main()

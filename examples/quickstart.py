@@ -1,0 +1,42 @@
+"""Quickstart: personalized + private P2P learning in ~60 lines.
+
+10 agents with related-but-distinct linear tasks collaborate over a
+similarity graph; we compare purely-local models, the paper's non-private
+coordinate descent (Eq. 4), and the differentially-private variant (Eq. 6).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import DPConfig, make_objective, run_private, run_scan, train_local_models
+from repro.core.objective import LOGISTIC
+from repro.data.synthetic import eval_accuracy, linear_classification_problem
+
+# 1. A network of agents with heterogeneous local datasets (Sec. 5.1 setup).
+prob = linear_classification_problem(n=10, p=20, m_low=15, m_high=80, seed=0)
+print(f"{prob.graph.n} agents, {prob.graph.num_edges()} edges, "
+      f"{int(prob.train.num_examples.sum())} total examples")
+
+# 2. Purely local models (the perfectly-private baseline).
+theta_loc = train_local_models(
+    prob.train, LOGISTIC, 1.0 / np.maximum(prob.train.num_examples, 1.0)
+)
+print(f"purely local accuracy:      {eval_accuracy(theta_loc, prob.test).mean():.3f}")
+
+# 3. The paper's objective (Eq. 2) and asynchronous block coordinate descent.
+obj = make_objective(prob.graph, prob.train, "logistic", mu=0.3, clip=1.0)
+res = run_scan(obj, theta_loc, T=600, rng=np.random.default_rng(1))
+print(f"collaborative CD accuracy:  {eval_accuracy(res.Theta, prob.test).mean():.3f} "
+      f"(objective {res.objective[0]:.2f} -> {res.objective[-1]:.2f})")
+
+# 4. The private variant: every broadcast is (eps, delta)-DP for the agent.
+priv = run_private(
+    obj, theta_loc, T=50, cfg=DPConfig(eps_bar=1.0), rng=np.random.default_rng(2)
+)
+print(f"private CD (eps=1) accuracy: {eval_accuracy(priv.Theta, prob.test).mean():.3f} "
+      f"(max eps spent: {priv.eps_spent.max():.3f})")

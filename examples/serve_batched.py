@@ -1,0 +1,27 @@
+"""Batched serving example: prefill + decode with KV caches for any of the
+10 assigned architectures (reduced sizes on CPU).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch zamba2-1.2b
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_mod.main([
+        "--arch", args.arch, "--preset", "tiny", "--batch", str(args.batch),
+        "--prompt-len", "32", "--decode-tokens", "16",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Dependency-free sharded checkpointing: npz shards + JSON manifest.
+
+Layout:
+    <dir>/manifest.json   — pytree structure, leaf dtypes/shapes, step, extra
+    <dir>/shard_<k>.npz   — flat leaves, chunked so no single file exceeds
+                            ``max_shard_bytes``
+
+Works for any pytree of arrays (params, P2P agent-stacked params, optimizer
+state). Loading restores exact dtypes (bf16 round-trips via uint16 views).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _to_numpy(x):
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return arr.view(np.uint16), _BF16
+    return arr, str(arr.dtype)
+
+
+def save_checkpoint(path, tree, step=0, extra=None, max_shard_bytes=1 << 30):
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {
+        "step": int(step),
+        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
+        if False else None,  # structure stored via flatten paths below
+        "paths": [],
+        "extra": extra or {},
+        "shards": [],
+    }
+    # store key paths for structure-checked reload
+    paths = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    manifest["paths"] = paths
+
+    shard, shard_bytes, shard_idx = {}, 0, 0
+    for i, leaf in enumerate(leaves):
+        arr, dt = _to_numpy(leaf)
+        shard[f"leaf_{i}"] = arr
+        manifest.setdefault("dtypes", {})[f"leaf_{i}"] = dt
+        shard_bytes += arr.nbytes
+        if shard_bytes >= max_shard_bytes:
+            np.savez(os.path.join(path, f"shard_{shard_idx}.npz"), **shard)
+            manifest["shards"].append({"file": f"shard_{shard_idx}.npz", "keys": list(shard)})
+            shard, shard_bytes, shard_idx = {}, 0, shard_idx + 1
+    if shard:
+        np.savez(os.path.join(path, f"shard_{shard_idx}.npz"), **shard)
+        manifest["shards"].append({"file": f"shard_{shard_idx}.npz", "keys": list(shard)})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path, like):
+    """Restore into the structure of ``like`` (a pytree of arrays/structs)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = {}
+    for sh in manifest["shards"]:
+        with np.load(os.path.join(path, sh["file"])) as z:
+            for k in sh["keys"]:
+                data[k] = z[k]
+    leaves_like, treedef = jax.tree.flatten(like)
+    leaves = []
+    for i, ref in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        if manifest.get("dtypes", {}).get(f"leaf_{i}") == _BF16:
+            arr = arr.view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves), manifest["step"], manifest.get("extra", {})

@@ -1,0 +1,50 @@
+# The paper's primary contribution: personalized, private, fully decentralized
+# learning via asynchronous block coordinate descent over an agent graph
+# (Bellet, Guerraoui, Taziki, Tommasi, 2017).
+from repro.core.graph import (
+    AgentGraph,
+    angular_similarity_graph,
+    circulant_graph,
+    complete_graph,
+    confidences,
+    erdos_renyi_graph,
+    knn_cosine_graph,
+    ring_graph,
+)
+from repro.core.objective import (
+    LOGISTIC,
+    LOSSES,
+    QUADRATIC,
+    AgentData,
+    Loss,
+    Objective,
+    make_objective,
+)
+from repro.core.coordinate_descent import (
+    CDResult,
+    proposition1_bound,
+    run,
+    run_scan,
+    sample_wake_sequence,
+    synchronous_round,
+)
+from repro.core.dp_cd import DPCDResult, DPConfig, run_private
+from repro.core.privacy import (
+    PrivacyAccountant,
+    compose_kairouz,
+    gaussian_scale,
+    invert_uniform_budget,
+    laplace_scale,
+    proposition2_allocation,
+    theorem2_bound,
+)
+from repro.core.model_propagation import (
+    private_local_models,
+    private_warm_start,
+    run_propagation,
+    train_local_models,
+)
+from repro.core.admm_baseline import ADMMResult, run_admm
+from repro.core.local_dp import perturb_dataset
+
+__all__ = [k for k in dir() if not k.startswith("_")]

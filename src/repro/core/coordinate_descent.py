@@ -1,0 +1,202 @@
+"""The paper's non-private algorithm (Sec. 2.3): asynchronous decentralized
+block coordinate descent under the Poisson-clock / broadcast model.
+
+Faithful semantics: at each global tick t, one uniformly-random agent i wakes
+up, performs the Eq. 4 update
+
+    Theta_i <- (1 - alpha_i) Theta_i
+               + alpha_i ( sum_j (W_ij / D_ii) Theta_j - mu c_i grad L_i(Theta_i) )
+
+with alpha_i = 1 / (1 + mu c_i L_i^loc), and broadcasts Theta_i to its
+neighbourhood (cost: one p-dimensional vector per neighbour under the
+broadcast model of Aysal et al. — we account messages as |N_i| edge-vectors
+so the comparison with gossip ADMM in Fig. 1 is fair on the same axis).
+
+Two execution paths share the same math:
+* ``run``            — python loop, arbitrary wake sequences, full history.
+* ``run_scan``       — lax.scan over a pre-sampled wake sequence (jit, fast).
+
+Both are used by tests to cross-validate each other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import Objective
+
+
+@dataclasses.dataclass
+class CDResult:
+    Theta: np.ndarray  # final (n, p)
+    objective: np.ndarray  # (T+1,) Q at every tick (0 = init)
+    messages: np.ndarray  # (T+1,) cumulative p-vectors transmitted
+    wake_sequence: np.ndarray  # (T,)
+
+
+def sample_wake_sequence(n: int, T: int, rng: np.random.Generator) -> np.ndarray:
+    """Global-clock view of n i.i.d. rate-1 Poisson clocks: uniform agent per tick."""
+    return rng.integers(0, n, size=T)
+
+
+def cd_update(obj: Objective, Theta, i):
+    """One Eq. 4 update for agent ``i``. jit-able; ``i`` may be traced."""
+    W = jnp.asarray(obj.graph.weights)
+    d = jnp.asarray(obj.degrees)
+    c = jnp.asarray(obj.confidences)
+    alphas = jnp.asarray(obj.alphas())
+    theta_i = Theta[i]
+    neigh = W[i] @ Theta / d[i]  # sum_j W_ij Theta_j / D_ii
+    grad_i = obj.local_grad(Theta)[i]
+    new_i = (1.0 - alphas[i]) * theta_i + alphas[i] * (neigh - obj.mu * c[i] * grad_i)
+    return Theta.at[i].set(new_i)
+
+
+def _single_agent_grad(obj: Objective, theta_i, i):
+    """grad L_i at theta_i for (possibly traced) agent index i."""
+    dt = theta_i.dtype
+    X = jnp.asarray(obj.data.X, dt)[i]
+    y = jnp.asarray(obj.data.y, dt)[i]
+    mask = jnp.asarray(obj.data.mask, dt)[i]
+    lam = jnp.asarray(obj.lambdas, dt)[i]
+    m = jnp.maximum(mask.sum(), 1.0)
+    g = obj._point_grads(theta_i, X, y)
+    return jnp.sum(g * mask[:, None], axis=0) / m + 2.0 * lam * theta_i
+
+
+def run(
+    obj: Objective,
+    Theta0: np.ndarray,
+    T: int,
+    rng: np.random.Generator,
+    record_every: int = 1,
+    wake_sequence: np.ndarray | None = None,
+) -> CDResult:
+    """Python-loop reference implementation (exact Eq. 4 semantics)."""
+    n = obj.n
+    if wake_sequence is None:
+        wake_sequence = sample_wake_sequence(n, T, rng)
+    Theta = jnp.asarray(Theta0, dtype=jnp.float32)
+    deg_counts = np.array([len(obj.graph.neighbors(i)) for i in range(n)])
+    objective = [float(obj.value(Theta))]
+    messages = [0.0]
+    msg = 0.0
+    update = jax.jit(lambda Th, i: _cd_step(obj, Th, i))
+    for t in range(T):
+        i = int(wake_sequence[t])
+        Theta = update(Theta, i)
+        msg += float(deg_counts[i])
+        if (t + 1) % record_every == 0 or t == T - 1:
+            objective.append(float(obj.value(Theta)))
+            messages.append(msg)
+    return CDResult(
+        Theta=np.asarray(Theta),
+        objective=np.asarray(objective),
+        messages=np.asarray(messages),
+        wake_sequence=np.asarray(wake_sequence),
+    )
+
+
+def _cd_step(obj: Objective, Theta, i):
+    W = jnp.asarray(obj.graph.weights, dtype=Theta.dtype)
+    d = jnp.asarray(obj.degrees, dtype=Theta.dtype)
+    c = jnp.asarray(obj.confidences, dtype=Theta.dtype)
+    alphas = jnp.asarray(obj.alphas(), dtype=Theta.dtype)
+    theta_i = Theta[i]
+    neigh = W[i] @ Theta / d[i]
+    grad_i = _single_agent_grad(obj, theta_i, i)
+    new_i = (1.0 - alphas[i]) * theta_i + alphas[i] * (neigh - obj.mu * c[i] * grad_i)
+    return Theta.at[i].set(new_i)
+
+
+def run_scan(
+    obj: Objective,
+    Theta0: np.ndarray,
+    T: int,
+    rng: np.random.Generator,
+    record_every: int = 1,
+    wake_sequence: np.ndarray | None = None,
+    noise_scales: np.ndarray | None = None,
+    noise_key=None,
+    record_objective: bool = True,
+) -> CDResult:
+    """lax.scan fast path. Optionally adds Laplace noise to the local gradient
+    with per-(tick) scale ``noise_scales[t]`` for the waking agent (this is the
+    Eq. 6 private update; scale 0 recovers the non-private algorithm).
+    """
+    n, p = obj.n, obj.p
+    if wake_sequence is None:
+        wake_sequence = sample_wake_sequence(n, T, rng)
+    wake = jnp.asarray(wake_sequence, dtype=jnp.int32)
+    if noise_scales is None:
+        noise = jnp.zeros((T, p), dtype=jnp.float32)
+    else:
+        if noise_key is None:
+            noise_key = jax.random.PRNGKey(rng.integers(2**31 - 1))
+        lap = jax.random.laplace(noise_key, shape=(T, p), dtype=jnp.float32)
+        noise = lap * jnp.asarray(noise_scales, dtype=jnp.float32)[:, None]
+
+    W = jnp.asarray(obj.graph.weights, dtype=jnp.float32)
+    d = jnp.asarray(obj.degrees, dtype=jnp.float32)
+    c = jnp.asarray(obj.confidences, dtype=jnp.float32)
+    alphas = jnp.asarray(obj.alphas(), dtype=jnp.float32)
+    deg_counts = jnp.asarray(
+        np.array([len(obj.graph.neighbors(i)) for i in range(n)]), dtype=jnp.float32
+    )
+
+    def step(carry, inp):
+        Theta, msg = carry
+        i, eta = inp
+        theta_i = Theta[i]
+        neigh = W[i] @ Theta / d[i]
+        grad_i = _single_agent_grad(obj, theta_i, i) + eta
+        new_i = (1.0 - alphas[i]) * theta_i + alphas[i] * (neigh - obj.mu * c[i] * grad_i)
+        Theta = Theta.at[i].set(new_i)
+        msg = msg + deg_counts[i]
+        val = obj.value(Theta) if record_objective else jnp.zeros(())
+        return (Theta, msg), (val, msg)
+
+    (ThetaT, _), (objs, msgs) = jax.lax.scan(
+        step, (jnp.asarray(Theta0, dtype=jnp.float32), jnp.zeros(())), (wake, noise)
+    )
+    q0 = float(obj.value(jnp.asarray(Theta0, jnp.float32))) if record_objective else 0.0
+    objective = np.concatenate([[q0], np.asarray(objs)])
+    messages = np.concatenate([[0.0], np.asarray(msgs)])
+    if record_every > 1:
+        idx = np.unique(np.concatenate([[0], np.arange(record_every, T + 1, record_every), [T]]))
+        objective = objective[idx]
+        messages = messages[idx]
+    return CDResult(
+        Theta=np.asarray(ThetaT),
+        objective=objective,
+        messages=messages,
+        wake_sequence=np.asarray(wake_sequence),
+    )
+
+
+def synchronous_round(obj: Objective, Theta):
+    """All agents apply Eq. 4 simultaneously from the same snapshot.
+
+    This is the SPMD scale-layer schedule (DESIGN.md §4.2): one round = n
+    async ticks in expectation. Fixed points coincide with Eq. 4's: a round
+    is ``Theta <- Theta - diag(1/L_i) grad Q(Theta)`` blockwise.
+    """
+    W = jnp.asarray(obj.graph.weights, dtype=Theta.dtype)
+    d = jnp.asarray(obj.degrees, dtype=Theta.dtype)
+    c = jnp.asarray(obj.confidences, dtype=Theta.dtype)
+    alphas = jnp.asarray(obj.alphas(), dtype=Theta.dtype)
+    neigh = (W @ Theta) / d[:, None]
+    grads = obj.local_grad(Theta)
+    return (1.0 - alphas[:, None]) * Theta + alphas[:, None] * (
+        neigh - obj.mu * c[:, None] * grads
+    )
+
+
+def proposition1_bound(obj: Objective, gap0: float, T: int) -> np.ndarray:
+    """E[Q(T)] - Q* <= (1 - sigma/(n L_max))^T (Q(0) - Q*)."""
+    C = obj.contraction()
+    return gap0 * (C ** np.arange(T + 1))

@@ -1,0 +1,169 @@
+"""Agent graphs for peer-to-peer personalized learning.
+
+The paper (Sec. 2.1) models the collaboration network as a weighted connected
+graph G = ([n], E, W) whose weights encode task relatedness.  This module
+builds the weight matrices used throughout:
+
+* ``angular_similarity_graph`` — the synthetic linear-classification setup of
+  Sec. 5.1: ``W_ij = exp((cos(phi_ij) - 1) / gamma)`` from the angles between
+  the agents' (hidden) target models, with negligible weights dropped.
+* ``knn_cosine_graph`` — the MovieLens setup of Sec. 5.2: ``W_ij = 1`` iff i
+  is in the 10-NN of j (or vice versa) under cosine similarity of the raw
+  per-agent data vectors.
+* ``ring_graph`` / ``circulant_graph`` — collective-friendly topologies used
+  by the SPMD scale layer (a union of ring permutations lowers to
+  ``lax.ppermute``).
+* ``erdos_renyi_graph`` — random sparse topology for robustness tests.
+
+All constructors return an :class:`AgentGraph` with the degree vector
+``D_ii = sum_j W_ij`` precomputed (Eq. 2 normalization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class AgentGraph:
+    """Symmetric non-negative weight matrix with zero diagonal."""
+
+    weights: np.ndarray  # (n, n) float64
+
+    def __post_init__(self):
+        w = self.weights
+        if w.ndim != 2 or w.shape[0] != w.shape[1]:
+            raise ValueError(f"weights must be square, got {w.shape}")
+        if not np.allclose(w, w.T, atol=1e-10):
+            raise ValueError("weights must be symmetric")
+        if np.any(np.diag(w) != 0.0):
+            raise ValueError("weights must have zero diagonal")
+        if np.any(w < 0.0):
+            raise ValueError("weights must be non-negative")
+
+    @property
+    def n(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        """D_ii = sum_j W_ij."""
+        return self.weights.sum(axis=1)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.weights[i] > 0.0)[0]
+
+    def laplacian(self) -> np.ndarray:
+        return np.diag(self.degrees) - self.weights
+
+    def is_connected(self) -> bool:
+        n = self.n
+        seen = np.zeros(n, dtype=bool)
+        stack = [0]
+        seen[0] = True
+        while stack:
+            i = stack.pop()
+            for j in np.nonzero(self.weights[i] > 0.0)[0]:
+                if not seen[j]:
+                    seen[j] = True
+                    stack.append(int(j))
+        return bool(seen.all())
+
+    def num_edges(self) -> int:
+        return int(np.count_nonzero(np.triu(self.weights, 1)))
+
+
+def angular_similarity_graph(
+    target_models: np.ndarray, gamma: float = 0.1, threshold: float = 1e-2
+) -> AgentGraph:
+    """Paper Sec. 5.1: W_ij = exp((cos(phi_ij) - 1) / gamma), thresholded.
+
+    ``target_models``: (n, p) array of the agents' target separators.
+    Weights below ``threshold`` are considered negligible and dropped.
+    """
+    t = np.asarray(target_models, dtype=np.float64)
+    norms = np.linalg.norm(t, axis=1, keepdims=True)
+    norms = np.where(norms == 0.0, 1.0, norms)
+    unit = t / norms
+    cos = np.clip(unit @ unit.T, -1.0, 1.0)
+    w = np.exp((cos - 1.0) / gamma)
+    np.fill_diagonal(w, 0.0)
+    w[w < threshold] = 0.0
+    # Symmetrize against numerical asymmetry.
+    w = 0.5 * (w + w.T)
+    return AgentGraph(w)
+
+
+def knn_cosine_graph(features: np.ndarray, k: int = 10) -> AgentGraph:
+    """Paper Sec. 5.2: unit weight iff i in kNN(j) or j in kNN(i), cosine sim."""
+    f = np.asarray(features, dtype=np.float64)
+    norms = np.linalg.norm(f, axis=1, keepdims=True)
+    norms = np.where(norms == 0.0, 1.0, norms)
+    unit = f / norms
+    sim = unit @ unit.T
+    np.fill_diagonal(sim, -np.inf)
+    n = f.shape[0]
+    w = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        nn = np.argpartition(-sim[i], k)[:k]
+        w[i, nn] = 1.0
+    w = np.maximum(w, w.T)  # i in kNN(j) OR j in kNN(i)
+    np.fill_diagonal(w, 0.0)
+    return AgentGraph(w)
+
+
+def ring_graph(n: int, weight: float = 1.0) -> AgentGraph:
+    w = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        w[i, (i + 1) % n] = weight
+        w[(i + 1) % n, i] = weight
+    return AgentGraph(w)
+
+
+def circulant_graph(n: int, offsets: tuple[int, ...], weights=None) -> AgentGraph:
+    """Union of ring permutations: agent i connects to i +/- o for o in offsets.
+
+    This is the collective-friendly family: the neighbour sum
+    ``sum_j W_ij Theta_j`` decomposes into |offsets| * 2 ``ppermute`` calls on
+    the agent mesh axis (see repro.core.spmd).
+    """
+    if weights is None:
+        weights = [1.0] * len(offsets)
+    w = np.zeros((n, n), dtype=np.float64)
+    for o, wt in zip(offsets, weights):
+        o = o % n
+        if o == 0:
+            continue
+        for i in range(n):
+            j = (i + o) % n
+            w[i, j] = max(w[i, j], wt)
+            w[j, i] = max(w[j, i], wt)
+    return AgentGraph(w)
+
+
+def erdos_renyi_graph(n: int, prob: float, rng: np.random.Generator, weight: float = 1.0) -> AgentGraph:
+    while True:
+        upper = rng.random((n, n)) < prob
+        w = np.triu(upper, 1).astype(np.float64) * weight
+        w = w + w.T
+        g = AgentGraph(w)
+        if g.is_connected():
+            return g
+
+
+def complete_graph(n: int, weight: float = 1.0) -> AgentGraph:
+    w = np.full((n, n), weight, dtype=np.float64)
+    np.fill_diagonal(w, 0.0)
+    return AgentGraph(w)
+
+
+def confidences(num_examples: np.ndarray, floor: float = 1e-3) -> np.ndarray:
+    """Paper footnote 2: c_i = m_i / max_j m_j (plus small constant if m_i=0)."""
+    m = np.asarray(num_examples, dtype=np.float64)
+    mx = m.max()
+    if mx <= 0:
+        return np.full_like(m, floor)
+    c = m / mx
+    return np.clip(c, floor, 1.0)

@@ -1,0 +1,133 @@
+"""Model propagation (Supp. C) and the private warm start.
+
+With L_i(Theta_i) = 1/2 ||Theta_i - Theta_i^loc||^2, the Eq. 4 update becomes
+the *exact* block minimizer (Eq. 16):
+
+    Theta_i <- ( sum_j (W_ij/D_ii) Theta_j + mu c_i Theta_i^loc ) / (1 + mu c_i)
+
+which recovers Vanhaesebrouck et al. (2017)'s model propagation. Since the
+data only enters through Theta_i^loc, a DP version of Theta_i^loc makes the
+whole propagation private at no per-iteration cost — this is the paper's
+private warm start (Remark 3).
+
+DP local models use output perturbation (Chaudhuri et al., 2011): L_i is
+(2 lambda_i)-strongly convex and swapping one data point moves its gradient
+by at most 2 L0 / m_i, so the minimizer moves by at most
+(2 L0 / m_i) / (2 lambda_i) = L0 / (lambda_i m_i); Laplace noise with scale
+L0 / (lambda_i m_i eps) gives (eps, 0)-DP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import AgentGraph
+from repro.core.objective import AgentData, Objective, make_objective
+
+
+def propagation_objective(
+    graph: AgentGraph, theta_loc: np.ndarray, mu: float, confidences: np.ndarray
+):
+    """Q_MP of Eq. 15 as closures (value, exact solve, one sync round)."""
+    W = graph.weights
+    d = graph.degrees
+    n, p = theta_loc.shape
+
+    def value(Theta):
+        diffs = Theta[:, None, :] - Theta[None, :, :]
+        smooth = 0.25 * np.sum(W * np.sum(diffs**2, axis=-1))
+        local = 0.5 * mu * np.sum(d * confidences * np.sum((Theta - theta_loc) ** 2, axis=-1))
+        return smooth + local
+
+    def solve():
+        # (diag(D)(I + mu C) - W) Theta = mu diag(D) C theta_loc, per dimension.
+        A = np.diag(d * (1.0 + mu * confidences)) - W
+        B = mu * (d * confidences)[:, None] * theta_loc
+        return np.linalg.solve(A, B)
+
+    return value, solve
+
+
+def propagation_update(graph: AgentGraph, Theta, theta_loc, mu, confidences, i):
+    """Eq. 16 for one agent (exact block minimizer)."""
+    W = graph.weights
+    d = graph.degrees
+    neigh = W[i] @ Theta / d[i]
+    return (neigh + mu * confidences[i] * theta_loc[i]) / (1.0 + mu * confidences[i])
+
+
+def run_propagation(
+    graph: AgentGraph,
+    theta_loc: np.ndarray,
+    mu: float,
+    confidences: np.ndarray,
+    T: int,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Asynchronous model propagation; returns final Theta."""
+    n = graph.n
+    Theta = theta_loc.copy()
+    for t in range(T):
+        i = int(rng.integers(n))
+        Theta[i] = propagation_update(graph, Theta, theta_loc, mu, confidences, i)
+    return Theta
+
+
+def train_local_models(data: AgentData, loss, lambdas, steps: int = 300, lr: float = 0.5):
+    """Theta_i^loc per Eq. 1 via jit-scanned full-batch gradient descent."""
+    X = jnp.asarray(data.X, jnp.float32)
+    y = jnp.asarray(data.y, jnp.float32)
+    mask = jnp.asarray(data.mask, jnp.float32)
+    lam = jnp.asarray(lambdas, jnp.float32)
+    n, _, p = data.X.shape
+
+    def agent_loss(theta, Xi, yi, mi, l):
+        m = jnp.maximum(mi.sum(), 1.0)
+        vals = jax.vmap(lambda x, yy: loss.point_loss(theta, x, yy))(Xi, yi)
+        return jnp.sum(vals * mi) / m + l * jnp.sum(theta**2)
+
+    grad = jax.grad(agent_loss)
+
+    def step(Theta, _):
+        g = jax.vmap(grad)(Theta, X, y, mask, lam)
+        return Theta - lr * g, None
+
+    Theta0 = jnp.zeros((n, p), jnp.float32)
+    ThetaT, _ = jax.lax.scan(step, Theta0, None, length=steps)
+    return np.asarray(ThetaT)
+
+
+def private_local_models(
+    theta_loc: np.ndarray,
+    l0: float,
+    lambdas: np.ndarray,
+    num_examples: np.ndarray,
+    eps: float,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Output perturbation: Theta~_i^loc = Theta_i^loc + Lap(0, L0/(lam_i m_i eps))^p."""
+    n, p = theta_loc.shape
+    m = np.maximum(num_examples, 1.0)
+    scales = l0 / (lambdas * m * eps)
+    noise = rng.laplace(0.0, 1.0, size=(n, p)) * scales[:, None]
+    return theta_loc + noise
+
+
+def private_warm_start(
+    obj: Objective,
+    eps_warm: float,
+    rng: np.random.Generator,
+    propagation_ticks: int | None = None,
+) -> np.ndarray:
+    """Remark 3 / Supp. C: DP local models + (data-free) model propagation."""
+    theta_loc = train_local_models(obj.data, obj.loss, obj.lambdas)
+    l0 = obj.lipschitz_l1()
+    theta_priv = private_local_models(
+        theta_loc, l0, obj.lambdas, obj.data.num_examples, eps_warm, rng
+    )
+    T = propagation_ticks if propagation_ticks is not None else 10 * obj.n
+    return run_propagation(obj.graph, theta_priv, obj.mu, obj.confidences, T, rng)

@@ -1,0 +1,266 @@
+"""The paper's update (Eq. 4/6) as an SPMD program on the production mesh.
+
+This is the scale layer (DESIGN.md §4): agents are mesh slices, the
+broadcast-gossip neighbour sum becomes ``lax.ppermute`` ring collectives
+over the agent axis, and the DP perturbation (clip + Laplace) runs fused on
+each agent's local gradient.
+
+Semantics vs the paper (recorded deviations, DESIGN.md §9):
+* synchronous rounds (all agents update from the same snapshot) instead of
+  Poisson single-agent wake-ups — same fixed points; the simulator in
+  ``coordinate_descent.py`` keeps the faithful async semantics and
+  ``test_spmd.py`` cross-checks both against each other;
+* for transformer-scale models the DP unit is the per-round *aggregated*
+  local gradient, clipped to C in global L2 norm (the paper's per-example
+  clipping is kept in the simulator and in the dp_clip_noise kernel, which
+  serving-scale linear heads use directly);
+* c_i == 1 (uniform confidence): the scale layer feeds equal-size local
+  batches per agent each round.
+
+Update per agent (leaf-wise over the param pytree):
+
+    Theta_i <- (1 - alpha) Theta_i
+               + alpha * ( sum_o w_o (Theta_{i-o} + Theta_{i+o})
+                           - mu * (clip_C(grad_i) + eta_i) )
+
+with eta_i ~ Laplace(0, s)^dim, s = 2 C / (eps_step * m_i).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import P2PConfig
+from repro.core import privacy
+from repro.models.sharding import batch_specs, cache_specs, param_specs
+
+
+# ---------------------------------------------------------------------------
+# Gossip
+# ---------------------------------------------------------------------------
+
+
+def agent_axes_of(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def num_agents(mesh, agent_mode: str) -> int:
+    if agent_mode == "full":
+        n = mesh.shape["data"]
+        if "pod" in mesh.shape:
+            n *= mesh.shape["pod"]
+        return n
+    return mesh.shape.get("pod", 1)
+
+
+def _ring_perm(n: int, shift: int):
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def gossip_ppermute(params, specs, mesh, offsets, agent_axes, gossip_dtype=None):
+    """Circulant neighbour mean via collective_permute along the agent axes.
+
+    Returns sum_j (W_ij / D_ii) Theta_j for the ring-union graph W with unit
+    weights on +/-o for o in offsets (D_ii = 2 |offsets|).
+    """
+    n = int(np.prod([mesh.shape[a] for a in agent_axes]))
+    w = 1.0 / (2 * len(offsets))
+
+    axis = agent_axes if len(agent_axes) > 1 else agent_axes[0]
+
+    def body(tree):
+        def mix_leaf(x):
+            orig_dtype = x.dtype
+            xg = x.astype(gossip_dtype) if gossip_dtype is not None else x
+            acc = jnp.zeros(xg.shape, dtype=jnp.float32)
+            for o in offsets:
+                fwd = jax.lax.ppermute(xg, axis, _ring_perm(n, o))
+                bwd = jax.lax.ppermute(xg, axis, _ring_perm(n, -o))
+                acc = acc + w * (fwd.astype(jnp.float32) + bwd.astype(jnp.float32))
+            return acc.astype(orig_dtype)
+
+        return jax.tree.map(mix_leaf, tree)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(specs,),
+        out_specs=specs,
+        check_vma=False,
+    )(params)
+
+
+def gossip_dense(params, mix_matrix):
+    """Dense-W fallback: einsum over the agent dim (GSPMD emits all-gathers).
+
+    ``mix_matrix``: (A, A) row-normalized W/D. Baseline for §Perf lever (i).
+    """
+    return jax.tree.map(
+        lambda x: jnp.einsum(
+            "ij,j...->i...", mix_matrix.astype(jnp.float32), x.astype(jnp.float32)
+        ).astype(x.dtype),
+        params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# DP perturbation
+# ---------------------------------------------------------------------------
+
+
+def _tree_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_and_noise(grads, key, clip, noise_scale):
+    """Global-L2 clip to `clip`, then add Laplace(0, noise_scale) per coord."""
+    norm = _tree_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        (x.astype(jnp.float32) * scale
+         + noise_scale * jax.random.laplace(k, x.shape, jnp.float32)).astype(x.dtype)
+        for x, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+# ---------------------------------------------------------------------------
+# Train-step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class P2PPlan:
+    """Everything the launcher needs to pjit one training round."""
+
+    train_step: Callable  # (params, batch, key) -> (params, metrics)
+    in_specs: tuple  # (param_specs, batch_specs, None)
+    out_specs: tuple
+    n_agents: int
+    eps_step: float
+    noise_scale: float
+
+
+def make_train_step(bundle, p2p: P2PConfig, mesh, local_batch_size: int,
+                    alpha: float = 0.5, gossip: str = "ppermute"):
+    """Build the pjit-able P2P-DP training round for a model bundle."""
+    agent_mode = p2p.agent_mode
+    A = num_agents(mesh, agent_mode)
+    agent_axes = agent_axes_of(mesh)
+    m_i = max(local_batch_size, 1)
+
+    if p2p.dp_enabled:
+        eps_step = privacy.invert_uniform_budget(p2p.eps_bar, p2p.planned_rounds, p2p.delta_bar)
+        noise_scale = 2.0 * p2p.clip / (eps_step * m_i)
+    else:
+        eps_step, noise_scale = 0.0, 0.0
+
+    gossip_dtype = jnp.dtype(p2p.gossip_dtype) if p2p.gossip_dtype else None
+    do_gossip = p2p.enabled and A > 1
+    mix_mat = None
+    if do_gossip and gossip == "dense":
+        W = np.zeros((A, A))
+        for o in p2p.neighbor_offsets:
+            for i in range(A):
+                W[i, (i + o) % A] = 1.0
+                W[i, (i - o) % A] = 1.0
+        mix_mat = jnp.asarray(W / W.sum(1, keepdims=True), jnp.float32)
+
+    def agent_update(params_a, grads_a, mixed_a, key_a):
+        noisy = (
+            clip_and_noise(grads_a, key_a, p2p.clip, noise_scale)
+            if p2p.dp_enabled
+            else grads_a
+        )
+        def leaf(theta, mix, g):
+            t32 = theta.astype(jnp.float32)
+            m32 = mix.astype(jnp.float32) if do_gossip else t32
+            return ((1.0 - alpha) * t32 + alpha * (m32 - p2p.mu * g.astype(jnp.float32))
+                    ).astype(theta.dtype)
+        return jax.tree.map(leaf, params_a, mixed_a, noisy)
+
+    # Agents are always a leading (stacked) param/batch axis; in silo mode A
+    # is the pod count (1 single-pod), so the vmap is over a size-A axis and
+    # gossip runs over the pod axis only.
+    gossip_axes = agent_axes if agent_mode == "full" else ("pod",)
+    offsets = tuple(o for o in p2p.neighbor_offsets if o % max(A, 1) != 0) or (1,)
+
+    def train_step(params, batch, key):
+        losses, grads = jax.vmap(jax.value_and_grad(bundle.loss))(params, batch)
+        if do_gossip:
+            if gossip == "dense":
+                mixed = gossip_dense(params, mix_mat)
+            else:
+                specs = param_specs(params, mesh, agent_mode, A)
+                mixed = gossip_ppermute(
+                    params, specs, mesh, offsets, gossip_axes, gossip_dtype
+                )
+        else:
+            mixed = params
+        keys = jax.random.split(key, A)
+        new_params = jax.vmap(agent_update)(params, grads, mixed, keys)
+        metrics = {
+            "loss": losses.mean(),
+            "grad_norm": jax.vmap(_tree_norm)(grads).mean(),
+        }
+        return new_params, metrics
+
+    return train_step, eps_step, noise_scale
+
+
+def make_fedavg_step(bundle, mesh, lr: float = 3e-4):
+    """Single-global-model baseline (the paper's mu -> 0 extreme).
+
+    Every agent slot holds the same model; gradients are averaged across the
+    agent axis each round (complete-graph consensus). Used to compare the
+    personalization objective against classic data-parallel training.
+    """
+
+    def train_step(params, batch, key):
+        losses, grads = jax.vmap(jax.value_and_grad(bundle.loss))(params, batch)
+        new_params = jax.tree.map(
+            lambda p, g: (
+                p.astype(jnp.float32)
+                - lr * jnp.broadcast_to(
+                    jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True), p.shape
+                )
+            ).astype(p.dtype),
+            params, grads,
+        )
+        metrics = {"loss": losses.mean(), "grad_norm": jax.vmap(_tree_norm)(grads).mean()}
+        return new_params, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# pjit wiring helpers (used by launch/ and the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def shardings_for(tree, mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def jit_train_step(train_step, mesh, pspecs, bspecs):
+    ps = shardings_for(None, mesh, pspecs)
+    bs = shardings_for(None, mesh, bspecs)
+    return jax.jit(
+        train_step,
+        in_shardings=(ps, bs, None),
+        out_shardings=(ps, None),
+        donate_argnums=(0,),
+    )

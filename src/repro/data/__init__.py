@@ -1,0 +1,4 @@
+from repro.data.synthetic import linear_classification_problem
+from repro.data.movielens import movielens_twin
+
+__all__ = ["linear_classification_problem", "movielens_twin"]

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused per-example clip -> mean -> Laplace-noise add.
+
+This is the DP hot-spot of the private update (Eq. 6): every agent must,
+per round, clip N per-example gradients (Supp. D.2), average them, and
+perturb the average. Done naively this is three HBM round-trips over an
+(N, D) tensor; fused it is one.
+
+TPU adaptation: two-pass structure over a (N_blk, D_blk) grid.
+Pass 1 (``_norms_kernel``): accumulate per-example squared norms across
+feature blocks — D is the innermost grid axis so the (N_blk,) accumulator
+block stays resident in VMEM while feature tiles stream through.
+Pass 2 (``_clip_mean_kernel``): re-stream the tiles, scale each example row
+by min(1, C/norm), accumulate the mean over example blocks (N innermost),
+and on the last example block add ``noise_scale * noise``.
+
+Block shapes are VPU-lane aligned: examples in multiples of 8 (sublane),
+features in multiples of 128 (lane).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_BN = 128  # examples per tile
+DEF_BD = 512  # features per tile
+
+
+def _norms_kernel(g_ref, out_ref):
+    j = pl.program_id(1)
+    g = g_ref[...].astype(jnp.float32)
+    partial = jnp.sum(g * g, axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+def _clip_mean_kernel(g_ref, norms_ref, noise_ref, out_ref, *, clip, noise_scale, n_total, nb):
+    i = pl.program_id(1)  # example-block index (innermost)
+    g = g_ref[...].astype(jnp.float32)
+    nrm = jnp.sqrt(jnp.maximum(norms_ref[...], 1e-24))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+    partial = jnp.sum(g * scale[:, None], axis=0) / n_total
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(i != 0)
+    def _acc():
+        out_ref[...] += partial
+
+    @pl.when(i == nb - 1)
+    def _noise():
+        out_ref[...] += noise_scale * noise_ref[...].astype(jnp.float32)
+
+
+def dp_clip_noise(grads, noise, clip, noise_scale, block_n=DEF_BN, block_d=DEF_BD,
+                  interpret=False, n_true=None):
+    """grads: (N, D); noise: (D,) standard Laplace. Returns (D,) float32.
+
+    ``n_true``: denominator for the mean (true example count when rows are
+    zero-padded to a block multiple; padded rows contribute 0 to the sum).
+    """
+    N, D = grads.shape
+    n_true = N if n_true is None else n_true
+    bn = min(block_n, N)
+    bd = min(block_d, D)
+    nb_n = pl.cdiv(N, bn)
+    nb_d = pl.cdiv(D, bd)
+
+    norms = pl.pallas_call(
+        _norms_kernel,
+        grid=(nb_n, nb_d),
+        in_specs=[pl.BlockSpec((bn, bd), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(grads)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _clip_mean_kernel,
+            clip=float(clip),
+            noise_scale=float(noise_scale),
+            n_total=float(n_true),
+            nb=nb_n,
+        ),
+        grid=(nb_d, nb_n),  # features outer, examples inner (accumulate over N)
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda j, i: (i, j)),
+            pl.BlockSpec((bn,), lambda j, i: (i,)),
+            pl.BlockSpec((bd,), lambda j, i: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        interpret=interpret,
+    )(grads, norms, noise)
+    return out

@@ -1,0 +1,93 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the TPU
+lowering is the target); ``INTERPRET`` flips automatically based on the
+backend so the same call sites run compiled on real TPUs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dp_clip_noise as _dpk
+from repro.kernels import graph_mix as _gmk
+from repro.kernels import ssm_scan as _ssk
+
+
+def _default_interpret():
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("clip", "noise_scale", "block_n", "block_d", "interpret")
+)
+def dp_clip_noise(grads, noise, clip, noise_scale, block_n=128, block_d=512, interpret=None):
+    """Fused per-example clip -> mean -> noise. grads (N,D), noise (D,) -> (D,)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    N, D = grads.shape
+    bn = min(block_n, max(8, N))
+    bd = min(block_d, max(128, D))
+    g = _pad_to(_pad_to(grads, bn, 0), bd, 1)
+    nz = _pad_to(noise, bd, 0)
+    # zero-padded rows have zero norm/zero grad: they do not affect the mean
+    # because the kernel divides by the true N.
+    out = _dpk.dp_clip_noise(
+        g, nz, clip, noise_scale, block_n=bn, block_d=bd, interpret=interpret, n_true=N
+    )
+    return out[:D]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "block_k", "interpret"))
+def graph_mix(mix, theta, block_p=256, block_k=128, interpret=None):
+    """Y = mix @ theta. mix (n,n), theta (n,p) -> (n,p) float32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n, p = theta.shape
+    bp = min(block_p, max(128, p))
+    t = _pad_to(theta, bp, 1)
+    out = _gmk.graph_mix(mix, t, block_p=bp, block_k=block_k, interpret=interpret)
+    return out[:, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssm_chunk(C, B, cum, dt, x, interpret=None):
+    """Mamba2 intra-chunk SSD. See repro.kernels.ssm_scan."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssk.ssm_chunk(C, B, cum, dt, x, interpret=interpret)
+
+
+# Differentiable variant: Pallas kernel on the forward pass, oracle VJP on
+# the backward pass (standard practice until a hand-written bwd kernel
+# lands; the bwd is the same einsum family and XLA fuses it well).
+@jax.custom_vjp
+def ssm_chunk_ad(C, B, cum, dt, x):
+    return ssm_chunk(C, B, cum, dt, x)
+
+
+def _ssm_chunk_fwd(C, B, cum, dt, x):
+    from repro.kernels import ref as _ref
+
+    out = ssm_chunk(C, B, cum, dt, x)
+    return out, (C, B, cum, dt, x)
+
+
+def _ssm_chunk_bwd(res, g):
+    from repro.kernels import ref as _ref
+
+    _, vjp = jax.vjp(_ref.ssm_chunk_ref, *res)
+    return vjp(g)
+
+
+ssm_chunk_ad.defvjp(_ssm_chunk_fwd, _ssm_chunk_bwd)

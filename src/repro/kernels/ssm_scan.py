@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: Mamba2 intra-chunk SSD block (zamba2 hot-spot).
+
+One grid step processes one (batch, chunk, head) group entirely in VMEM:
+  scores[q,t] = (C_q . B_t) * exp(cum_q - cum_t) * dt_t   (t <= q)
+  y           = scores @ x                                 (Q x P)
+  s_loc[p,n]  = sum_t exp(cum_Q - cum_t) dt_t x_t[p] B_t[n]
+Chunk tiles (Q<=128, N=64, P=64) are MXU-friendly; the inter-chunk
+recurrence stays a lax.scan in repro.models.ssm (it is O(chunks) and
+bandwidth-trivial).
+
+Inputs are pre-flattened to G = batch*chunks*heads groups. cum/dt arrive as
+(G, Q, 1) so every VMEM tile is >=2D (TPU vector layout requirement).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_chunk_kernel(c_ref, b_ref, cum_ref, dt_ref, x_ref, y_ref, s_ref):
+    C = c_ref[0].astype(jnp.float32)  # (Q, N)
+    B = b_ref[0].astype(jnp.float32)  # (Q, N)
+    cum = cum_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    x = x_ref[0].astype(jnp.float32)  # (Q, P)
+    Q = C.shape[0]
+
+    cb = jax.lax.dot(C, B.T, precision=jax.lax.Precision.HIGHEST)  # (Q, Q)
+    delta = cum[:, None] - cum[None, :]
+    decay = jnp.exp(jnp.clip(delta, -60.0, 0.0))
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    scores = jnp.where(ti <= qi, cb * decay * dt[None, :], 0.0)
+    y_ref[0] = jax.lax.dot(scores, x, precision=jax.lax.Precision.HIGHEST)
+
+    w_end = jnp.exp(jnp.clip(cum[-1] - cum, -60.0, 0.0)) * dt  # (Q,)
+    xw = x * w_end[:, None]  # (Q, P)
+    s_ref[0] = jax.lax.dot(xw.T, B, precision=jax.lax.Precision.HIGHEST)  # (P, N)
+
+
+def ssm_chunk(C, B, cum, dt, x, interpret=False):
+    """C,B: (G,Q,N); cum,dt: (G,Q); x: (G,Q,P) -> y (G,Q,P), s_loc (G,P,N)."""
+    G, Q, N = C.shape
+    P = x.shape[-1]
+    cum3 = cum[..., None]
+    dt3 = dt[..., None]
+    return pl.pallas_call(
+        _ssm_chunk_kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, P, N), lambda g: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((G, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(C, B, cum3, dt3, x)

@@ -1,0 +1,107 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimb driver: runs named variants of the three selected
+(arch x shape) pairs and appends hypothesis/before/after rows to
+results/perf_iterations.jsonl.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --pair llama
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_one
+
+PAIRS = {
+    # Most representative of the paper's technique: full P2P-DP round,
+    # 16 personal models, ppermute gossip.
+    "llama": ("llama3.2-1b", "train_4k"),
+    # Most collective-bound baseline.
+    "qwen": ("qwen2.5-14b", "train_4k"),
+    # Worst roofline fraction (compute term tiny vs the rest): MoE with
+    # 512-wide experts — dispatch machinery dwarfs the expert GEMMs.
+    "moe": ("granite-moe-3b-a800m", "train_4k"),
+    # Bonus iteration: decode is all-gather-bound (the seq-sharded GQA cache
+    # gets gathered for attention).
+    "decode": ("llama3.2-1b", "decode_32k"),
+}
+
+VARIANTS = {
+    "llama": [
+        ("baseline", {}),
+        # H1: dense gossip all-gathers full agent-stacked params; circulant
+        # ppermute should move ~A/k x fewer bytes. (validates the paper-side
+        # design choice by measuring its inverse)
+        ("gossip_dense", dict(gossip="dense")),
+        # H2: Megatron sequence-parallel residual: per-layer activation
+        # all-reduce (2x operand) becomes reduce-scatter + all-gather
+        # (1x operand each, but operands are 1/16 the size per device).
+        ("seq_parallel", dict(seq_parallel=True)),
+        # H3: DP off isolates the cost of the privacy machinery (noise
+        # sampling + clipping) — expected ~0 collective delta.
+        ("no_dp", dict(dp_on=False)),
+        # Iter 2 (dominant term now memory): drop remat — trades HBM
+        # *capacity* (stored activations) for ~fwd-pass fewer HBM reads.
+        ("seqpar_noremat", dict(seq_parallel=True, remat=False)),
+    ],
+    "qwen": [
+        ("baseline", {}),
+        ("seq_parallel", dict(seq_parallel=True)),
+        # H: disabling gossip isolates the P2P exchange's share of the
+        # collective term (expected small vs TP all-reduces: ppermute moves
+        # params once/round, TP moves activations ~3x per layer).
+        ("no_p2p", dict(p2p_on=False)),
+        ("seqpar_noremat", dict(seq_parallel=True, remat=False)),
+    ],
+    "decode": [
+        ("baseline", {}),
+        # H: pre-repeat KV in the cache so the head dim (32) divides the
+        # model axis -> per-shard attention, no cache all-gather. Cost: 4x
+        # cache bytes (kv 8 -> 32 heads).
+        ("repeat_kv_cache", dict(repeat_kv=True)),
+    ],
+    "moe": [
+        ("baseline", {}),
+        # H1: bigger dispatch groups + cf 1.0 cut one-hot dispatch tensors
+        # (G x gs x E x C scales with C ~ gs k cf / E) and router padding.
+        ("gs512_cf1", dict(moe_overrides=dict(group_size=512, capacity_factor=1.0))),
+        # H2: seq-parallel on top.
+        ("gs512_cf1_seqpar", dict(moe_overrides=dict(group_size=512, capacity_factor=1.0),
+                                  seq_parallel=True)),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS), required=True)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="results/perf_iterations.jsonl")
+    args = ap.parse_args()
+    arch, shape = PAIRS[args.pair]
+    for name, kw in VARIANTS[args.pair]:
+        if args.variant and name != args.variant:
+            continue
+        kw = dict(kw)
+        repeat_kv = kw.pop("repeat_kv", False)
+        from repro.models.attention import set_repeat_kv_cache
+
+        set_repeat_kv_cache(repeat_kv)
+        try:
+            row = run_one(arch, shape, multi_pod=False,
+                          variant=f"{args.pair}:{name}", **kw)
+        finally:
+            set_repeat_kv_cache(False)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(row) + "\n")
+        print(f"[{args.pair}:{name}] compute={row['compute_s']:.3f} "
+              f"memory={row['memory_s']:.3f} collective={row['collective_s']:.3f} "
+              f"dominant={row['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

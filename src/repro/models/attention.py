@@ -1,0 +1,220 @@
+"""GQA attention with RoPE, optional QKV bias, sliding window, logit
+soft-capping, and a KV-cache decode path (ring buffer for windowed attention).
+
+Decode assumption (documented in DESIGN.md): batched aligned decode — all
+sequences in the batch are at the same absolute position ``pos`` (scalar).
+This matches the dry-run shapes (decode_32k / long_500k) and keeps cache
+indexing a single dynamic_update_slice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, init_dense
+
+NEG_INF = -1e30
+
+# §Perf lever (decode): store the KV cache pre-repeated to the full q-head
+# count. 2x (GQA 4x) cache memory, but the kv-head dim then divides the
+# model axis, so per-shard attention needs NO cache all-gather.
+REPEAT_KV_IN_CACHE = False
+
+
+def set_repeat_kv_cache(flag: bool):
+    global REPEAT_KV_IN_CACHE
+    REPEAT_KV_IN_CACHE = flag
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "q": init_dense(kq, d, cfg.num_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "k": init_dense(kk, d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "v": init_dense(kv, d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "o": init_dense(ko, cfg.num_heads * hd, d, dtype=dtype),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(*x.shape[:-1], n_heads, hd)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+CHUNKED_ATTN_THRESHOLD = 16384  # above this S, q-block chunking (flash-style)
+
+
+def _chunked_causal_attention(q, kr, vr, positions, cfg, window, q_chunk=1024):
+    """Flash-style q-block attention: never materializes the (S, S) score
+    matrix — per block it is (q_chunk, S). Sequential lax.map keeps one
+    block's transients live at a time (the TPU kernel analogue tiles the
+    same way in VMEM)."""
+    B, S, H, hd = q.shape
+    nq = S // q_chunk
+    qi = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pi = positions.reshape(nq, q_chunk)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    def one(args):
+        qc, pc = args  # (B, qc, H, hd), (qc,)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, kr).astype(jnp.float32) * scale
+        scores = _softcap(scores, cfg.logit_softcap)
+        mask = positions[None, :] <= pc[:, None]
+        if window is not None:
+            mask = mask & (pc[:, None] - positions[None, :] < window)
+        bias = jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+        scores = scores + bias[None, None]
+        w = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, vr)
+
+    out = jax.lax.map(one, (qi, pi))  # (nq, B, qc, H, hd)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def attention(params, x, cfg, positions=None, causal=True, window=None, kv_memory=None):
+    """Full-sequence attention (train / prefill / encoder).
+
+    x: (B, S, d). kv_memory: optional (B, S_kv, d) for cross-attention (then
+    causal/window are ignored and no RoPE is applied to memory keys).
+    Returns (y, (k, v)) — cached K/V in (B, S_kv, KV, hd) layout.
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    src = kv_memory if kv_memory is not None else x
+    q = _split_heads(dense(params["q"], x), H, hd)
+    k = _split_heads(dense(params["k"], src), KV, hd)
+    v = _split_heads(dense(params["v"], src), KV, hd)
+    if kv_memory is None:
+        if positions is None:
+            positions = jnp.arange(S)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kr = _repeat_kv(k, H // KV)
+    vr = _repeat_kv(v, H // KV)
+    if kv_memory is None and causal and S >= CHUNKED_ATTN_THRESHOLD and S % 1024 == 0:
+        y = _chunked_causal_attention(q, kr, vr, positions, cfg, window)
+        y = y.reshape(B, S, H * hd)
+        return dense(params["o"], y), (k, v)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) / jnp.sqrt(hd).astype(
+        jnp.float32
+    )
+    scores = _softcap(scores, cfg.logit_softcap)
+    if kv_memory is None and causal:
+        # additive bias (not where/select): keeps the bool mask out of the
+        # saved-residual set and off the per-layer remat stacks.
+        qi = positions[:, None]
+        ki = positions[None, :]
+        mask = ki <= qi
+        if window is not None:
+            mask = mask & (qi - ki < window)
+        bias = jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+        scores = scores + bias[None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    y = jnp.einsum("bhqk,bkhd->bqhd", w, vr)
+    y = y.reshape(B, S, H * hd)
+    return dense(params["o"], y), (k, v)
+
+
+def init_cache(cfg, batch, max_len, dtype):
+    """KV cache. For windowed attention the buffer is the window (ring)."""
+    hd = cfg.resolved_head_dim
+    size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    heads = cfg.num_heads if REPEAT_KV_IN_CACHE else cfg.num_kv_heads
+    return {
+        "k": jnp.zeros((batch, size, heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, size, heads, hd), dtype=dtype),
+        "slot_pos": jnp.full((size,), -1, dtype=jnp.int32),  # absolute pos per slot
+    }
+
+
+def prefill_into_cache(cfg, cache, k, v, seq_len):
+    """Write prefill K/V (already RoPE'd) into the cache buffer."""
+    size = cache["k"].shape[1]
+    if seq_len <= size:
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        cache["slot_pos"] = cache["slot_pos"].at[:seq_len].set(jnp.arange(seq_len))
+        return cache
+    # Windowed: keep the last `size` positions, ring-aligned.
+    start = seq_len - size
+    tail_k = k[:, start:]
+    tail_v = v[:, start:]
+    pos = jnp.arange(start, seq_len)
+    slots = pos % size
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, slots].set(tail_k)
+    cache["v"] = cache["v"].at[:, slots].set(tail_v)
+    cache["slot_pos"] = cache["slot_pos"].at[slots].set(pos)
+    return cache
+
+
+def decode_attention(params, x, cfg, cache, pos):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 absolute position.
+
+    Returns (y, new_cache). RoPE is applied at write time for K.
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    q = _split_heads(dense(params["q"], x), H, hd)
+    k = _split_heads(dense(params["k"], x), KV, hd)
+    v = _split_heads(dense(params["v"], x), KV, hd)
+    posv = jnp.full((1,), pos, dtype=jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    if REPEAT_KV_IN_CACHE:
+        k = _repeat_kv(k, H // KV)
+        v = _repeat_kv(v, H // KV)
+
+    size = cache["k"].shape[1]
+    slot = jnp.asarray(pos % size if cfg.sliding_window else pos, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    new_k = jax.lax.dynamic_update_slice(cache["k"], k, (zero, slot, zero, zero))
+    new_v = jax.lax.dynamic_update_slice(cache["v"], v, (zero, slot, zero, zero))
+    slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"], posv, (slot,))
+    new_cache = {"k": new_k, "v": new_v, "slot_pos": slot_pos}
+
+    rep = 1 if REPEAT_KV_IN_CACHE else H // KV
+    kr = _repeat_kv(new_k, rep)
+    vr = _repeat_kv(new_v, rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) / jnp.sqrt(hd).astype(
+        jnp.float32
+    )
+    scores = _softcap(scores, cfg.logit_softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    scores = scores + jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    y = jnp.einsum("bhqk,bkhd->bqhd", w, vr).reshape(B, 1, H * hd)
+    return dense(params["o"], y), new_cache
+
+
+def decode_cross_attention(params, x, cfg, mem_k, mem_v):
+    """Cross-attention during decode against a fixed encoder memory."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    q = _split_heads(dense(params["q"], x), H, hd)
+    kr = _repeat_kv(mem_k, H // KV)
+    vr = _repeat_kv(mem_v, H // KV)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) / jnp.sqrt(hd).astype(
+        jnp.float32
+    )
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    y = jnp.einsum("bhqk,bkhd->bqhd", w, vr).reshape(B, 1, H * hd)
+    return dense(params["o"], y)

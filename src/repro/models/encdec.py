@@ -1,0 +1,219 @@
+"""Encoder-decoder transformer (seamless-m4t style speech-to-text backbone).
+
+The modality frontend is the documented stub: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model) supplied by
+``input_specs`` — we implement the transformer that processes them, a
+bidirectional encoder + causal decoder with cross-attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (
+    cross_entropy_loss,
+    dtype_of,
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+    unembed,
+)
+
+ENC_DOWNSAMPLE = 4  # stubbed conv frontend downsampling factor (frames -> d)
+
+
+def enc_len(seq_len: int) -> int:
+    return max(seq_len // ENC_DOWNSAMPLE, 1)
+
+
+def _init_enc_block(key, cfg, dtype):
+    ka, kf = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_mod.init_attention(ka, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "ffn": init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_block(key, cfg, dtype):
+    ka, kx, kf = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "self_attn": attn_mod.init_attention(ka, cfg, dtype),
+        "ln_x": init_rmsnorm(cfg.d_model, dtype),
+        "cross_attn": attn_mod.init_attention(kx, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "ffn": init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg):
+    dtype = dtype_of(cfg)
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.num_layers)
+    params = {
+        "embed": init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "encoder": jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(enc_keys),
+        "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+        "decoder": jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(dec_keys),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(kh, cfg.padded_vocab, cfg.d_model, dtype)
+    return params
+
+
+def encode(params, embeds, cfg, remat=True):
+    """embeds: (B, S_enc, d) from the stubbed frontend."""
+    from repro.models.sharding import constrain_batch
+
+    x = constrain_batch(embeds.astype(dtype_of(cfg)))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(layer_params, x):
+        h, _ = attn_mod.attention(
+            layer_params["attn"],
+            rms_norm(layer_params["ln1"], x, cfg.norm_eps),
+            cfg,
+            positions=positions,
+            causal=False,
+        )
+        x = x + h
+        return x + swiglu(layer_params["ffn"], rms_norm(layer_params["ln2"], x, cfg.norm_eps))
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, layer_params):
+        return body(layer_params, x), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["encoder"])
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(cfg, layer_params, x, memory, positions, window):
+    h, _ = attn_mod.attention(
+        layer_params["self_attn"],
+        rms_norm(layer_params["ln1"], x, cfg.norm_eps),
+        cfg,
+        positions=positions,
+        window=window,
+    )
+    x = x + h
+    h, kv = attn_mod.attention(
+        layer_params["cross_attn"],
+        rms_norm(layer_params["ln_x"], x, cfg.norm_eps),
+        cfg,
+        kv_memory=memory,
+    )
+    x = x + h
+    return x + swiglu(layer_params["ffn"], rms_norm(layer_params["ln2"], x, cfg.norm_eps)), kv
+
+
+def forward(params, embeds, tokens, cfg, remat=True):
+    memory = encode(params, embeds, cfg, remat=remat)
+    x = embed(params["embed"], tokens)
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+
+    body = functools.partial(_dec_block, cfg)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, layer_params):
+        x, _ = body(layer_params, x, memory, positions, cfg.sliding_window)
+        return x, None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["decoder"])
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("lm_head", params["embed"]), x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, remat=True):
+    logits, aux = forward(params, batch["embeds"], batch["tokens"][:, :-1], cfg, remat=remat)
+    return cross_entropy_loss(logits, batch["tokens"][:, 1:]) + aux
+
+
+def prefill(params, embeds, tokens, cfg, max_len=None):
+    """Encode + run decoder prompt; build self-attn caches and cross K/V."""
+    from repro.models.sharding import constrain_batch
+
+    memory = encode(params, embeds, cfg, remat=False)
+    B, S = tokens.shape
+    max_len = max_len if max_len is not None else S
+    x = constrain_batch(embed(params["embed"], tokens))
+    positions = jnp.arange(S)
+    dtype = dtype_of(cfg)
+    cache0 = attn_mod.init_cache(cfg, B, max_len, dtype)
+
+    def scan_fn(x, layer_params):
+        x = constrain_batch(x)
+        h_in = rms_norm(layer_params["ln1"], x, cfg.norm_eps)
+        h, (k, v) = attn_mod.attention(
+            layer_params["self_attn"], h_in, cfg, positions=positions, window=cfg.sliding_window
+        )
+        self_cache = attn_mod.prefill_into_cache(cfg, cache0, k, v, S)
+        x = x + h
+        h, (mk, mv) = attn_mod.attention(
+            layer_params["cross_attn"], rms_norm(layer_params["ln_x"], x, cfg.norm_eps), cfg,
+            kv_memory=memory,
+        )
+        x = x + h
+        x = x + swiglu(layer_params["ffn"], rms_norm(layer_params["ln2"], x, cfg.norm_eps))
+        return x, {"self": self_cache, "mem_k": mk, "mem_v": mv}
+
+    x, caches = jax.lax.scan(scan_fn, x, params["decoder"])
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("lm_head", params["embed"]), x[:, -1:])
+    return logits, caches
+
+
+def init_cache(params, cfg, batch, max_len, enc_seq=None):
+    """Decode-cache template (self-attn ring/full + cross-attn memory K/V)."""
+    dtype = dtype_of(cfg)
+    enc_seq = enc_seq if enc_seq is not None else enc_len(max_len)
+    hd = cfg.resolved_head_dim
+    one = {
+        "self": attn_mod.init_cache(cfg, batch, max_len, dtype),
+        "mem_k": jnp.zeros((batch, enc_seq, cfg.num_kv_heads, hd), dtype),
+        "mem_v": jnp.zeros((batch, enc_seq, cfg.num_kv_heads, hd), dtype),
+    }
+    return jax.tree.map(lambda c: jnp.broadcast_to(c, (cfg.num_layers, *c.shape)), one)
+
+
+def decode_step(params, token, cfg, caches, pos):
+    x = embed(params["embed"], token)
+
+    def scan_fn(x, inp):
+        layer_params, cache = inp
+        h_in = rms_norm(layer_params["ln1"], x, cfg.norm_eps)
+        h, new_self = attn_mod.decode_attention(
+            layer_params["self_attn"], h_in, cfg, cache["self"], pos
+        )
+        x = x + h
+        h = attn_mod.decode_cross_attention(
+            layer_params["cross_attn"],
+            rms_norm(layer_params["ln_x"], x, cfg.norm_eps),
+            cfg,
+            cache["mem_k"],
+            cache["mem_v"],
+        )
+        x = x + h
+        x = x + swiglu(layer_params["ffn"], rms_norm(layer_params["ln2"], x, cfg.norm_eps))
+        return x, {"self": new_self, "mem_k": cache["mem_k"], "mem_v": cache["mem_v"]}
+
+    x, new_caches = jax.lax.scan(scan_fn, x, (params["decoder"], caches))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("lm_head", params["embed"]), x)
+    return logits, new_caches

@@ -1,0 +1,164 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single *shared* attention block
+applied every ``shared_attn_every`` layers (arXiv:2411.15242).
+
+The shared block's weights are one copy (not scanned); inside the layer scan
+a lax.cond applies it on the designated layers. This is the faithful Zamba
+structure (shared transformer block re-used across depth) and keeps the HLO
+small: one mamba body + one attention body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import ssm
+from repro.models.layers import (
+    cross_entropy_loss,
+    dtype_of,
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+    unembed,
+)
+
+
+def init_params(key, cfg):
+    dtype = dtype_of(cfg)
+    ke, kl, ka, kf, kh = jax.random.split(key, 5)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+
+    def init_layer(k):
+        return {
+            "ln": init_rmsnorm(cfg.d_model, dtype),
+            "mamba": ssm.init_mamba2(k, cfg, dtype),
+        }
+
+    params = {
+        "embed": init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": jax.vmap(init_layer)(layer_keys),
+        "shared_attn": {
+            "ln1": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn_mod.init_attention(ka, cfg, dtype),
+            "ln2": init_rmsnorm(cfg.d_model, dtype),
+            "ffn": init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype),
+        },
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(kh, cfg.padded_vocab, cfg.d_model, dtype)
+    return params
+
+
+def _attn_maybe(cfg, shared, x, positions, use_attn, window):
+    def yes(x):
+        h, _ = attn_mod.attention(
+            shared["attn"], rms_norm(shared["ln1"], x, cfg.norm_eps), cfg,
+            positions=positions, window=window,
+        )
+        x = x + h
+        return x + swiglu(shared["ffn"], rms_norm(shared["ln2"], x, cfg.norm_eps))
+
+    return jax.lax.cond(use_attn, yes, lambda x: x, x)
+
+
+def forward(params, tokens, cfg, remat=True, window=None, last_only=False):
+    from repro.models.sharding import constrain_batch
+
+    x = constrain_batch(embed(params["embed"], tokens))
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    window = window if window is not None else cfg.sliding_window
+    every = cfg.shared_attn_every or (cfg.num_layers + 1)
+    use_attn = jnp.arange(cfg.num_layers) % every == every - 1
+    shared = params["shared_attn"]
+
+    def body(layer_params, use_a, x):
+        x = x + ssm.mamba2_forward(
+            layer_params["mamba"], rms_norm(layer_params["ln"], x, cfg.norm_eps), cfg
+        )
+        return _attn_maybe(cfg, shared, x, positions, use_a, window)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, inp):
+        layer_params, use_a = inp
+        return constrain_batch(body(layer_params, use_a, x)), None
+
+    x, _ = jax.lax.scan(scan_fn, x, (params["layers"], use_attn))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(params.get("lm_head", params["embed"]), x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, remat=True):
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens[:, :-1], cfg, remat=remat)
+    return cross_entropy_loss(logits, tokens[:, 1:]) + aux
+
+
+def init_cache(params, cfg, batch, max_len):
+    dtype = dtype_of(cfg)
+    m = ssm.init_mamba2_cache(None, cfg, batch, dtype)
+    caches = {
+        "mamba": jax.tree.map(lambda c: jnp.broadcast_to(c, (cfg.num_layers, *c.shape)), m),
+        "attn": attn_mod.init_cache(cfg, batch, max_len, dtype),
+        # one attention cache per attention application site
+    }
+    every = cfg.shared_attn_every or (cfg.num_layers + 1)
+    n_sites = sum(1 for i in range(cfg.num_layers) if i % every == every - 1)
+    caches["attn"] = jax.tree.map(
+        lambda c: jnp.broadcast_to(c, (max(n_sites, 1), *c.shape)), caches["attn"]
+    )
+    return caches
+
+
+def decode_step(params, token, cfg, caches, pos):
+    x = embed(params["embed"], token)
+    every = cfg.shared_attn_every or (cfg.num_layers + 1)
+    use_attn = jnp.arange(cfg.num_layers) % every == every - 1
+    site_idx = jnp.cumsum(use_attn.astype(jnp.int32)) - 1  # attn cache slot per layer
+    shared = params["shared_attn"]
+
+    def scan_fn(carry, inp):
+        x, attn_caches = carry
+        layer_params, mcache, use_a, site = inp
+        h, new_m = ssm.mamba2_decode(
+            layer_params["mamba"], rms_norm(layer_params["ln"], x, cfg.norm_eps), cfg, mcache
+        )
+        x = x + h
+
+        def yes(operand):
+            x, attn_caches = operand
+            cache = jax.tree.map(lambda c: c[site], attn_caches)
+            h_in = rms_norm(shared["ln1"], x, cfg.norm_eps)
+            h, new_cache = attn_mod.decode_attention(shared["attn"], h_in, cfg, cache, pos)
+            x = x + h
+            x = x + swiglu(shared["ffn"], rms_norm(shared["ln2"], x, cfg.norm_eps))
+            attn_caches = jax.tree.map(
+                lambda all_c, c: jax.lax.dynamic_update_index_in_dim(all_c, c, site, 0),
+                attn_caches,
+                new_cache,
+            )
+            return x, attn_caches
+
+        x, attn_caches = jax.lax.cond(use_a, yes, lambda op: op, (x, attn_caches))
+        return (x, attn_caches), new_m
+
+    (x, new_attn), new_mamba = jax.lax.scan(
+        scan_fn,
+        (x, caches["attn"]),
+        (params["layers"], caches["mamba"], use_attn, site_idx),
+    )
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("lm_head", params["embed"]), x)
+    return logits, {"mamba": new_mamba, "attn": new_attn}

@@ -1,0 +1,92 @@
+"""Shared building blocks: norms, projections, RoPE, SwiGLU, embeddings.
+
+Parameters are plain nested dicts of jnp arrays; every init function has a
+matching ``*_specs`` partner in ``repro.models.sharding`` that emits the
+PartitionSpec tree of identical structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_dense(key, d_in, d_out, bias=False, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    p = {"w": (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rms_norm(p, x, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_swiglu(key, d, f, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_dense(k1, d, f, dtype=dtype),
+        "up": init_dense(k2, d, f, dtype=dtype),
+        "down": init_dense(k3, f, d, dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def rope_frequencies(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, head_dim); positions: (S,) or (..., S) absolute ids."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_embedding(key, vocab, d, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    return x @ p["table"].T
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean next-token NLL; logits (..., V), labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0] - logz
+    nll = -ll
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,90 @@
+"""Mixture-of-Experts FFN: top-k router, grouped one-hot dispatch with
+capacity (GShard-style), SwiGLU experts, load-balance auxiliary loss.
+
+Memory note (DESIGN.md §7): dispatch tensors scale as T * E * C_g where the
+per-group capacity C_g = ceil(gs * top_k * cf / E) is bounded by the group
+size ``gs`` (config; tokens are grouped in chunks of gs). Small groups keep
+the dispatch footprint linear in T.
+
+Experts are tensor-parallel (d_ff sharded over the "model" axis) rather than
+expert-parallel: the assigned expert counts (40, 8) do not divide the 16-wide
+model axis, and TP-experts keeps the sharding uniform across all MoE archs.
+FLOPs remain honest: expert GEMMs run on top_k * cf * T tokens.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    fscale = 1.0 / math.sqrt(f)
+    return {
+        "router": init_dense(kr, d, E, dtype=jnp.float32),  # router kept in f32
+        "gate": (jax.random.normal(kg, (E, d, f)) * scale).astype(dtype),
+        "up": (jax.random.normal(ku, (E, d, f)) * scale).astype(dtype),
+        "down": (jax.random.normal(kd, (E, f, d)) * fscale).astype(dtype),
+    }
+
+
+def capacity(group_size: int, top_k: int, num_experts: int, cf: float) -> int:
+    return max(int(math.ceil(group_size * top_k * cf / num_experts)), 1)
+
+
+def moe_ffn(params, x, cfg):
+    """x: (B, S, d) -> (y: (B, S, d), aux_loss: scalar)."""
+    mcfg = cfg.moe
+    B, S, d = x.shape
+    E, k = mcfg.num_experts, mcfg.top_k
+    T = B * S
+    gs = min(mcfg.group_size, T)
+    # Pad T to a multiple of gs.
+    G = -(-T // gs)
+    pad = G * gs - T
+    xt = x.reshape(T, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(G, gs, d)
+
+    logits = (xg.astype(jnp.float32) @ params["router"]["w"]).astype(jnp.float32)  # (G,gs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)  # (G,gs,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    C = capacity(gs, k, E, mcfg.capacity_factor)
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)  # (G,gs,k,E)
+    # Queue position of each (token, choice) in its expert (priority: rank
+    # order then token order).
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * gs, E)  # rank-major
+    qpos = jnp.cumsum(flat, axis=1) - flat  # (G, k*gs, E)
+    qpos = qpos.reshape(G, k, gs, E).transpose(0, 2, 1, 3)  # (G,gs,k,E)
+    keep = (qpos < C) & (onehot > 0)
+    slot = jax.nn.one_hot(qpos.astype(jnp.int32), C, dtype=jnp.float32) * keep[..., None]
+    dispatch = slot.sum(axis=2)  # (G, gs, E, C)
+    combine = jnp.einsum("gsec,gske,gsk->gsec", dispatch, onehot, top_w)
+
+    xd = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)  # (G,E,C,d)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xd, params["gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xd, params["up"]
+    )
+    ye = jnp.einsum("gecf,efd->gecd", h, params["down"])  # (G,E,C,d)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)  # (G,gs,d)
+
+    y = y.reshape(G * gs, d)
+    if pad:
+        y = y[:T]
+    y = y.reshape(B, S, d)
+
+    # Load-balance loss (Switch/GShard): E * sum_e f_e * p_e.
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    fe = onehot.sum(axis=2).mean(axis=(0, 1))  # fraction routed per expert
+    aux = E * jnp.sum(me * fe) * mcfg.router_aux_weight
+    return y, aux

@@ -1,0 +1,79 @@
+"""Uniform model API over all families.
+
+``build_model(cfg)`` returns a :class:`ModelBundle` with a normalized
+surface: init / loss (train) / prefill / decode / cache-init. The launch
+layer (train.py, serve.py, dryrun.py) and the SPMD P2P layer only talk to
+this interface, so the paper's technique composes with every architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, transformer, xlstm_stack
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable  # (key) -> params
+    loss: Callable  # (params, batch) -> scalar
+    prefill: Callable  # (params, batch) -> (logits, caches)
+    decode: Callable  # (params, token, caches, pos) -> (logits, caches)
+    init_cache: Callable  # (params, batch_size, max_len) -> caches
+
+    def train_inputs(self, batch, seq):
+        """Concrete-shape template for the training batch (used by tests)."""
+        out = {"tokens": jnp.zeros((batch, seq), jnp.int32)}
+        if self.cfg.is_encdec:
+            out["embeds"] = jnp.zeros((batch, encdec.enc_len(seq), self.cfg.d_model), jnp.float32)
+        return out
+
+
+def build_model(cfg: ModelConfig, remat: bool = True) -> ModelBundle:
+    if cfg.is_encdec:
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            loss=lambda p, b: encdec.loss_fn(p, b, cfg, remat=remat),
+            prefill=lambda p, b: encdec.prefill(p, b["embeds"], b["tokens"], cfg),
+            decode=lambda p, t, c, pos: encdec.decode_step(p, t, cfg, c, pos),
+            init_cache=lambda p, bsz, mx: encdec.init_cache(p, cfg, bsz, mx),
+        )
+    if cfg.family == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: hybrid.init_params(key, cfg),
+            loss=lambda p, b: hybrid.loss_fn(p, b, cfg, remat=remat),
+            # recurrent-family prefill cost = the forward pass (state capture
+            # for serving continuity goes through the decode loop; see
+            # launch/serve.py). last_only avoids the full-seq lm_head.
+            prefill=lambda p, b: hybrid.forward(p, b["tokens"], cfg, remat=False,
+                                                last_only=True),
+            decode=lambda p, t, c, pos: hybrid.decode_step(p, t, cfg, c, pos),
+            init_cache=lambda p, bsz, mx: hybrid.init_cache(p, cfg, bsz, mx),
+        )
+    if cfg.family == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: xlstm_stack.init_params(key, cfg),
+            loss=lambda p, b: xlstm_stack.loss_fn(p, b, cfg, remat=remat),
+            prefill=lambda p, b: xlstm_stack.forward(p, b["tokens"], cfg, remat=False,
+                                                     last_only=True),
+            decode=lambda p, t, c, pos: xlstm_stack.decode_step(p, t, cfg, c, pos),
+            init_cache=lambda p, bsz, mx: xlstm_stack.init_cache(p, cfg, bsz, mx),
+        )
+    # dense / moe / vlm are all decoder-only transformers.
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        loss=lambda p, b: transformer.loss_fn(p, b, cfg, remat=remat),
+        prefill=lambda p, b: transformer.prefill(p, b["tokens"], cfg),
+        decode=lambda p, t, c, pos: transformer.decode_step(p, t, cfg, c, pos),
+        init_cache=lambda p, bsz, mx: transformer.init_cache(p, cfg, bsz, mx),
+    )

@@ -1,0 +1,240 @@
+"""PartitionSpec rules for every model family on the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+
+Two P2P agent modes (DESIGN.md §5):
+* ``full`` — params carry a leading agent axis of size n_agents
+  (= data-axis size x pods) sharded over ("pod","data"); within an agent the
+  model is tensor-parallel over "model".
+* ``silo`` — no agent axis (or pod-sized); params are FSDP-sharded over
+  "data" and tensor-parallel over "model" (giant archs).
+
+Rules are divisibility-aware: a dim is only sharded if the axis size divides
+it; otherwise the rule falls through to the next candidate dim (pjit is
+layout-only here — any valid spec is semantically correct, the choice just
+moves collective traffic, which is what §Perf iterates on).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# Optional activation-batch constraint used by inference paths: GSPMD's
+# propagation can replicate loop carries whose init is an unconstrained
+# constant (e.g. a zeros KV cache), which silently un-shards the whole
+# prefill. The launcher sets the batch axes here; library code calls
+# constrain_batch at anchor points.
+_ACT_AXES = None
+
+# §Perf lever: Megatron-style sequence parallelism. When set (to the model
+# axis name), the residual stream between TP regions is sharded on the SEQ
+# dim, turning per-layer activation all-reduces into reduce-scatter +
+# all-gather pairs (half the ICI bytes). Applied at the layer boundary by
+# constrain_seq.
+_SEQ_AXIS = None
+
+
+def set_seq_axis(axis):
+    global _SEQ_AXIS
+    _SEQ_AXIS = axis
+
+
+def constrain_seq(x, dim=1):
+    """Shard the sequence dim of an activation (B, S, d) over the TP axis."""
+    if _SEQ_AXIS is None:
+        return x
+    try:
+        from jax.sharding import get_abstract_mesh
+
+        size = get_abstract_mesh().shape[_SEQ_AXIS]
+    except Exception:
+        return x
+    if size <= 1 or x.ndim <= dim or x.shape[dim] % size != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = _SEQ_AXIS
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def set_activation_axes(axes):
+    global _ACT_AXES
+    _ACT_AXES = axes
+
+
+def constrain_batch(x, dim=0):
+    if _ACT_AXES is None:
+        return x
+    try:
+        size = _act_axes_size()
+    except Exception:
+        return x  # no mesh context (e.g. eval_shape) — constraint is a no-op
+    if size <= 1 or x.shape[dim] % size != 0 or x.shape[dim] < size:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = _ACT_AXES if isinstance(_ACT_AXES, str) else tuple(_ACT_AXES)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _act_axes_size():
+    import numpy as _np
+
+    from jax.sharding import get_abstract_mesh
+
+    mesh = get_abstract_mesh()
+    axes = (_ACT_AXES,) if isinstance(_ACT_AXES, str) else _ACT_AXES
+    return int(_np.prod([mesh.shape[a] for a in axes]))
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name]
+
+
+def _pick_dims(shape, skip, mesh, model_axis, fsdp_axis=None):
+    """Choose (model_dim, fsdp_dim) to shard for a leaf of `shape`.
+
+    Preference: shard the *last* divisible dim over model (column-parallel
+    default), and the largest remaining divisible dim over data (FSDP).
+    Dims in `skip` (leading layer-stack / agent dims) are never sharded.
+    """
+    msz = _axis_size(mesh, model_axis)
+    cands = [i for i in range(len(shape)) if i not in skip]
+    model_dim = None
+    for i in reversed(cands):
+        if shape[i] % msz == 0 and shape[i] >= msz:
+            model_dim = i
+            break
+    fsdp_dim = None
+    if fsdp_axis is not None:
+        fsz = _axis_size(mesh, fsdp_axis)
+        rest = [i for i in cands if i != model_dim]
+        rest.sort(key=lambda i: -shape[i])
+        for i in rest:
+            if shape[i] % fsz == 0 and shape[i] >= fsz:
+                fsdp_dim = i
+                break
+    return model_dim, fsdp_dim
+
+
+def param_specs(params, mesh, agent_mode: str, n_agents: int, scan_dims=("layers",)):
+    """Build a PartitionSpec pytree matching ``params``.
+
+    ``params`` may be a pytree of arrays or of ShapeDtypeStructs.
+    In ``full`` mode the leaves are expected to carry the leading agent dim.
+    """
+    has_pod = "pod" in mesh.shape
+    agent_axes = ("pod", "data") if has_pod else ("data",)
+    fsdp_axis = "data" if agent_mode in ("silo", "serve") else None
+
+    def one(path, leaf):
+        shape = leaf.shape
+        path_str = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        skip = set()
+        spec = [None] * len(shape)
+        dim0 = 0
+        if agent_mode == "full":
+            # leading agent dim
+            spec[0] = agent_axes if len(agent_axes) > 1 else agent_axes[0]
+            skip.add(0)
+            dim0 = 1
+        elif agent_mode == "silo":
+            # leading pod-agent dim (size 1 on a single pod -> replicated)
+            spec[0] = "pod" if (has_pod and n_agents > 1) else None
+            skip.add(0)
+            dim0 = 1
+        # layer-stack dim (from scanned init) right after the agent dim.
+        if ("layers" in path_str or "encoder" in path_str or "decoder" in path_str
+                or "mlstm" in path_str or "slstm" in path_str or "ln_m" in path_str
+                or "ln_s" in path_str) and len(shape) > dim0:
+            skip.add(dim0)
+        if len(shape) - len(skip) == 0:
+            return P(*spec)
+        if len(shape) - len(skip) == 1 and shape[-1] < 1024:
+            return P(*spec)  # small vectors (norm scales, biases): replicate
+        if path_str.endswith("table") and len(shape) - dim0 == 2:
+            # embedding / lm-head: shard the (padded) vocab dim over "model"
+            # so logits stay vocab-sharded instead of replicated at full V.
+            msz = _axis_size(mesh, "model")
+            vdim, ddim = dim0, dim0 + 1
+            if shape[vdim] % msz == 0:
+                spec[vdim] = "model"
+                if fsdp_axis is not None and shape[ddim] % _axis_size(mesh, fsdp_axis) == 0:
+                    spec[ddim] = fsdp_axis
+                return P(*spec)
+        model_dim, fsdp_dim = _pick_dims(shape, skip, mesh, "model", fsdp_axis)
+        if model_dim is not None:
+            spec[model_dim] = "model"
+        if fsdp_dim is not None:
+            spec[fsdp_dim] = "data"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_specs(batch, mesh, agent_mode: str):
+    """Batch specs, divisibility-safe.
+
+    full  — dim0 is the agent dim, sharded over ("pod","data");
+    silo  — dim0 is the pod-agent dim ("pod" when pods>1, else replicated),
+            dim1 (per-agent batch) sharded over "data";
+    serve — dim0 is the request batch, sharded over ("pod","data") when the
+            size divides (long_500k's batch of 1 stays replicated).
+    """
+    has_pod = "pod" in mesh.shape
+    data_axes = ("pod", "data") if has_pod else ("data",)
+    lead = data_axes if len(data_axes) > 1 else data_axes[0]
+    lead_sz = _axis_size(mesh, data_axes)
+    dsz = _axis_size(mesh, "data")
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if agent_mode == "full":
+            if leaf.ndim >= 1 and leaf.shape[0] % lead_sz == 0:
+                spec[0] = lead
+        elif agent_mode == "silo":
+            if has_pod and leaf.ndim >= 1 and leaf.shape[0] % mesh.shape["pod"] == 0:
+                spec[0] = "pod"
+            if leaf.ndim >= 2 and leaf.shape[1] % dsz == 0 and leaf.shape[1] >= dsz:
+                spec[1] = "data"
+        else:  # serve
+            if leaf.ndim >= 1 and leaf.shape[0] % lead_sz == 0 and leaf.shape[0] >= lead_sz:
+                spec[0] = lead
+            elif leaf.ndim >= 1 and not has_pod and leaf.shape[0] % dsz == 0 and leaf.shape[0] >= dsz:
+                spec[0] = "data"
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_specs(cache, mesh, batch_sharded: bool):
+    """Decode-cache specs.
+
+    Layout is (layer, batch, seq, kv_heads, head_dim) for KV buffers. Batch
+    shards over ("pod","data"); the model axis takes the KV-head dim when it
+    divides, otherwise the SEQ dim (flash-decoding style: per-shard partial
+    attention + softmax combine, which GSPMD lowers to partial reductions).
+    Without either, a 32k x 128 MHA cache exceeds per-chip HBM.
+    """
+    has_pod = "pod" in mesh.shape
+    data_axes = ("pod", "data") if has_pod else ("data",)
+    lead = data_axes if len(data_axes) > 1 else data_axes[0]
+    dsz = _axis_size(mesh, data_axes)
+    msz = _axis_size(mesh, "model")
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        # caches are stacked per layer: dim0 = layer, dim1 = batch
+        if batch_sharded and leaf.ndim >= 2 and leaf.shape[1] % dsz == 0 and leaf.shape[1] >= dsz:
+            spec[1] = lead
+        if leaf.ndim == 5:  # (L, B, S, KV, hd)
+            if leaf.shape[3] % msz == 0 and leaf.shape[3] >= msz:
+                spec[3] = "model"
+            elif leaf.shape[2] % msz == 0 and leaf.shape[2] >= msz:
+                spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, cache)

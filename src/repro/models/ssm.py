@@ -1,0 +1,201 @@
+"""Mamba2-style selective SSM block (SSD), chunked for TPU.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute within chunks of size Q plus a linear inter-chunk state recurrence
+(lax.scan over chunks). Decode is the O(1) recurrent state update.
+
+Layout: d_inner = expand * d_model, nheads = d_inner / head_dim, single
+B/C group (ngroups=1), state_dim = N.
+
+The intra-chunk einsums are the compute hot-spot; ``repro.kernels.ssm_scan``
+provides the Pallas TPU kernel for them, validated against this reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, dense
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    nheads = di // s.head_dim
+    N = s.state_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj packs [z, x, B, C, dt].
+    d_in_proj = 2 * di + 2 * N + nheads
+    return {
+        "in_proj": init_dense(k1, d, d_in_proj, dtype=dtype),
+        "conv": (jax.random.normal(k2, (s.conv_kernel, di + 2 * N)) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), dtype=jnp.float32),
+        "out_proj": init_dense(k3, di, d, dtype=dtype),
+        "norm_z": jnp.ones((di,), dtype=dtype),
+    }
+
+
+def _split_proj(proj, di, N, nheads):
+    z = proj[..., :di]
+    x = proj[..., di : 2 * di]
+    B = proj[..., 2 * di : 2 * di + N]
+    C = proj[..., 2 * di + N : 2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N :]
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along seq. x: (B,S,D), w: (K,D)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    return out
+
+
+def mamba2_forward(params, xin, cfg, use_kernel=False):
+    """xin: (B, S, d_model) -> (B, S, d_model). Chunked SSD.
+
+    ``use_kernel=True`` routes the intra-chunk compute through the Pallas
+    kernel (repro.kernels.ops.ssm_chunk_ad; oracle VJP on backward).
+    """
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    N = s.state_dim
+    nheads = di // s.head_dim
+    hd = s.head_dim
+    Bsz, S, _ = xin.shape
+    Q = min(s.chunk, S)
+    assert S % Q == 0, f"seq {S} must be divisible by chunk {Q}"
+    nc = S // Q
+
+    proj = dense(params["in_proj"], xin)
+    z, x, Bssm, Cssm, dt = _split_proj(proj, di, N, nheads)
+    conv_in = jnp.concatenate([x, Bssm, Cssm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv"]))
+    x = conv_out[..., :di]
+    Bssm = conv_out[..., di : di + N]
+    Cssm = conv_out[..., di + N :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+    # per-step log decay: log a_t = A * dt_t  (<= 0)
+    loga = dt * A  # (B,S,H)
+
+    xh = x.reshape(Bsz, nc, Q, nheads, hd).astype(jnp.float32)
+    Bc = Bssm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cssm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, nheads)
+    lac = loga.reshape(Bsz, nc, Q, nheads)
+    cum = jnp.cumsum(lac, axis=2)  # (B,nc,Q,H) inclusive
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        # Flatten (B, nc, H) groups; C/B are shared across heads.
+        G = Bsz * nc * nheads
+        rep = lambda t: jnp.broadcast_to(
+            t[:, :, None], (Bsz, nc, nheads, Q, N)
+        ).reshape(G, Q, N)
+        Ck = rep(Cc)
+        Bk = rep(Bc)
+        cumk = cum.transpose(0, 1, 3, 2).reshape(G, Q)
+        dtk = dtc.transpose(0, 1, 3, 2).reshape(G, Q)
+        xk = xh.transpose(0, 1, 3, 2, 4).reshape(G, Q, hd)
+        yk, sk = kops.ssm_chunk_ad(Ck, Bk, cumk, dtk, xk)
+        y_intra = yk.reshape(Bsz, nc, nheads, Q, hd).transpose(0, 1, 3, 2, 4)
+        s_loc = sk.reshape(Bsz, nc, nheads, hd, N)
+    else:
+        # Intra-chunk (attention-like, causal):
+        # scores[b,c,h,q,t] = exp(cum_q - cum_t) * (C_q . B_t) * dt_t  for t <= q
+        cb = jnp.einsum("bcqn,bctn->bcqt", Cc, Bc)  # (B,nc,Q,Q)
+        decay = jnp.exp(
+            jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+        )  # (B,nc,Q,T,H)
+        causal = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+        scores = cb[..., None] * decay * dtc[:, :, None, :, :]  # (B,nc,Q,T,H)
+        scores = jnp.where(causal[None, None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("bcqth,bcthp->bcqhp", scores, xh)
+
+        # Chunk-local end state: S_loc[b,c,h,p,n] = sum_t exp(total-cum_t) dt_t x_t B_t
+        w_end = jnp.exp(jnp.clip(total[:, :, None, :] - cum, -60.0, 0.0)) * dtc
+        s_loc = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w_end, xh, Bc)
+
+    # Inter-chunk recurrence: S_c = exp(total_c) S_{c-1} + s_loc_c
+    def scan_fn(S_prev, inp):
+        s_l, tot = inp  # (B,H,hd,N), (B,H)
+        S_new = jnp.exp(tot)[:, :, None, None] * S_prev + s_l
+        return S_new, S_prev  # emit state *entering* the chunk
+
+    S0 = jnp.zeros((Bsz, nheads, hd, N), jnp.float32)
+    _, S_in = jax.lax.scan(
+        scan_fn,
+        S0,
+        (s_loc.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    S_in = S_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,hd,N)
+
+    # Inter-chunk output: y_inter[q] = exp(cum_q) * C_q . S_in
+    w_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, S_in, w_in)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, di)
+    y = y + params["D"].repeat(hd) * x.astype(jnp.float32)
+    # Gated RMS-style norm with z (Mamba2's norm-before-out_proj).
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_z"].astype(jnp.float32)
+    return dense(params["out_proj"], y.astype(xin.dtype))
+
+
+def init_mamba2_cache(params, cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nheads = di // s.head_dim
+    return {
+        "state": jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32),
+        "conv_buf": jnp.zeros((batch, s.conv_kernel - 1, di + 2 * s.state_dim), dtype),
+    }
+
+
+def mamba2_decode(params, xin, cfg, cache):
+    """One-token decode. xin: (B, 1, d_model)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    N = s.state_dim
+    nheads = di // s.head_dim
+    hd = s.head_dim
+    Bsz = xin.shape[0]
+
+    proj = dense(params["in_proj"], xin[:, 0])
+    z, x, Bssm, Cssm, dt = _split_proj(proj, di, N, nheads)
+    conv_in = jnp.concatenate([x, Bssm, Cssm], axis=-1)  # (B, di+2N)
+    buf = jnp.concatenate([cache["conv_buf"], conv_in[:, None]], axis=1)  # (B,K,·)
+    w = params["conv"]
+    conv_out = jax.nn.silu(jnp.einsum("bkd,kd->bd", buf, w))
+    new_conv_buf = buf[:, 1:]
+    x = conv_out[:, :di]
+    Bssm = conv_out[:, di : di + N].astype(jnp.float32)
+    Cssm = conv_out[:, di + N :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)  # (B,H)
+    xh = x.reshape(Bsz, nheads, hd).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bssm)
+    state = a[:, :, None, None] * cache["state"] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cssm, state)  # (B,H,hd)
+    y = y.reshape(Bsz, di) + params["D"].repeat(hd) * x.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_z"].astype(jnp.float32)
+    out = dense(params["out_proj"], y.astype(xin.dtype))
+    return out[:, None], {"state": state, "conv_buf": new_conv_buf}

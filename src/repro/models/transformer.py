@@ -1,0 +1,169 @@
+"""Decoder-only transformer (dense GQA / MoE / early-fusion VLM).
+
+Layers are scanned (stacked params, lax.scan) so the HLO contains a single
+layer body — essential to keep 512-device dry-run compiles tractable and to
+make remat policies uniform.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (
+    cross_entropy_loss,
+    dtype_of,
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+    unembed,
+)
+from repro.models.moe import init_moe, moe_ffn
+
+
+def _init_block(key, cfg, dtype):
+    ka, kf = jax.random.split(key)
+    block = {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_mod.init_attention(ka, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.moe is not None:
+        block["ffn"] = init_moe(kf, cfg, dtype)
+    else:
+        block["ffn"] = init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype)
+    return block
+
+
+def init_params(key, cfg):
+    dtype = dtype_of(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: _init_block(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(kh, cfg.padded_vocab, cfg.d_model, dtype)
+    return params
+
+
+def _block_apply(cfg, layer_params, x, positions, window):
+    from repro.models.sharding import constrain_seq
+
+    x = constrain_seq(x)  # seq-parallel residual (no-op unless enabled)
+    h, _ = attn_mod.attention(
+        layer_params["attn"],
+        rms_norm(layer_params["ln1"], x, cfg.norm_eps),
+        cfg,
+        positions=positions,
+        window=window,
+    )
+    x = constrain_seq(x + h)
+    h2 = rms_norm(layer_params["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = moe_ffn(layer_params["ffn"], h2, cfg)
+    else:
+        f, aux = swiglu(layer_params["ffn"], h2), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def forward(params, tokens, cfg, remat=True, window=None):
+    """tokens: (B, S) int32 -> logits (B, S, V)."""
+    x = embed(params["embed"], tokens)
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    window = window if window is not None else cfg.sliding_window
+
+    body = functools.partial(_block_apply, cfg)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(carry, layer_params):
+        x, aux = carry
+        x, a = body(layer_params, x, positions, window)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("lm_head", params["embed"]), x)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg, remat=True):
+    """Next-token LM loss. batch: {"tokens": (B,S)} (labels = shifted)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens[:, :-1], cfg, remat=remat)
+    return cross_entropy_loss(logits, tokens[:, 1:]) + aux
+
+
+def init_cache(params, cfg, batch, max_len):
+    dtype = dtype_of(cfg)
+    one = attn_mod.init_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda c: jnp.broadcast_to(c, (cfg.num_layers, *c.shape)), one
+    )
+
+
+def prefill(params, tokens, cfg, max_len=None, remat=False):
+    """Run the full prompt, build per-layer KV caches, return last logits."""
+    from repro.models.sharding import constrain_batch
+
+    B, S = tokens.shape
+    max_len = max_len if max_len is not None else S
+    x = constrain_batch(embed(params["embed"], tokens))
+    positions = jnp.arange(S)
+    window = cfg.sliding_window
+    dtype = dtype_of(cfg)
+    cache0 = attn_mod.init_cache(cfg, B, max_len, dtype)
+    cache0 = {k: (constrain_batch(v) if v.ndim == 4 else v) for k, v in cache0.items()}
+
+    def scan_fn(x, layer_params):
+        x = constrain_batch(x)
+        h_in = rms_norm(layer_params["ln1"], x, cfg.norm_eps)
+        h, (k, v) = attn_mod.attention(
+            layer_params["attn"], h_in, cfg, positions=positions, window=window
+        )
+        cache = attn_mod.prefill_into_cache(cfg, cache0, k, v, S)
+        x = x + h
+        h2 = rms_norm(layer_params["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, _ = moe_ffn(layer_params["ffn"], h2, cfg)
+        else:
+            f = swiglu(layer_params["ffn"], h2)
+        return x + f, cache
+
+    x, caches = jax.lax.scan(scan_fn, x, params["layers"])
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("lm_head", params["embed"]), x[:, -1:])
+    return logits, caches
+
+
+def decode_step(params, token, cfg, caches, pos):
+    """token: (B, 1) int32; caches: stacked per-layer; pos: scalar."""
+    x = embed(params["embed"], token)
+
+    def scan_fn(x, inp):
+        layer_params, cache = inp
+        h_in = rms_norm(layer_params["ln1"], x, cfg.norm_eps)
+        h, new_cache = attn_mod.decode_attention(layer_params["attn"], h_in, cfg, cache, pos)
+        x = x + h
+        h2 = rms_norm(layer_params["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, _ = moe_ffn(layer_params["ffn"], h2, cfg)
+        else:
+            f = swiglu(layer_params["ffn"], h2)
+        return x + f, new_cache
+
+    x, new_caches = jax.lax.scan(scan_fn, x, (params["layers"], caches))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("lm_head", params["embed"]), x)
+    return logits, new_caches

@@ -1,0 +1,253 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) with exponential gating + stabilizers.
+
+The 1.3B config uses the paper's xLSTM[7:1] pattern: one sLSTM block every
+``slstm_every`` blocks, the rest mLSTM. mLSTM training uses a chunkwise
+form (quadratic within chunks, recurrent across chunks) like Mamba2's SSD;
+sLSTM is inherently sequential (lax.scan over time).
+
+Both have O(1)-state decode, which is what qualifies xlstm-1.3b for the
+long_500k shape without any attention window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, init_rmsnorm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    x = cfg.xlstm
+    di = int(x.proj_factor * d)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": init_dense(ks[0], d, 2 * di, dtype=dtype),  # [x_in, z gate]
+        "q": init_dense(ks[1], di, di, dtype=dtype),
+        "k": init_dense(ks[2], di, di, dtype=dtype),
+        "v": init_dense(ks[3], di, di, dtype=dtype),
+        "igate": init_dense(ks[4], di, H, dtype=jnp.float32),
+        "fgate": init_dense(ks[5], di, H, dtype=jnp.float32),
+        "down": init_dense(ks[6], di, d, dtype=dtype),
+        "norm": init_rmsnorm(di, dtype=dtype),
+    }
+
+
+def mlstm_forward(params, xin, cfg):
+    """Chunkwise-parallel mLSTM. xin: (B,S,d) -> (B,S,d)."""
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = int(x.proj_factor * d)
+    H = cfg.num_heads
+    hd = di // H
+    B, S, _ = xin.shape
+    Q = min(x.chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    up = dense(params["up"], xin)
+    xi, z = up[..., :di], up[..., di:]
+    q = dense(params["q"], xi).reshape(B, S, H, hd).astype(jnp.float32)
+    k = dense(params["k"], xi).reshape(B, S, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    v = dense(params["v"], xi).reshape(B, S, H, hd).astype(jnp.float32)
+    ig = dense(params["igate"], xi).astype(jnp.float32)  # (B,S,H) log-space input gate
+    fg = jax.nn.log_sigmoid(dense(params["fgate"], xi).astype(jnp.float32))  # (B,S,H) <= 0
+
+    qc = q.reshape(B, nc, Q, H, hd)
+    kc = k.reshape(B, nc, Q, H, hd)
+    vc = v.reshape(B, nc, Q, H, hd)
+    igc = ig.reshape(B, nc, Q, H)
+    fgc = fg.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(fgc, axis=2)  # inclusive cumulative log forget
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    # Intra-chunk: D[q,t] = exp(cum_q - cum_t + ig_t) for t <= q (log-space,
+    # stabilized by the per-row max m).
+    logD = cum[:, :, :, None, :] - cum[:, :, None, :, :] + igc[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    logD = jnp.where(causal[None, None, :, :, None], logD, -jnp.inf)
+
+    # Inter-chunk: contribution weight for q against the entering state:
+    # exp(cum_q) (state already carries its own stabilizer m_prev).
+    def scan_fn(carry, inp):
+        Cst, nst, mst = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        kcc, vcc, igcc, cumc, totc = inp
+        # local chunk state in log-space with stabilizer m_loc
+        w = cumc[:, -1][:, None] - cumc + igcc  # (B,Q,H): exp weight for k_t v_t
+        m_loc = jnp.max(w, axis=1)  # (B,H)
+        m_new = jnp.maximum(mst + totc, m_loc)
+        scale_prev = jnp.exp(mst + totc - m_new)  # (B,H)
+        wexp = jnp.exp(w - m_new[:, None, :])  # (B,Q,H)
+        C_loc = jnp.einsum("bqh,bqhk,bqhv->bhkv", wexp, kcc, vcc)
+        n_loc = jnp.einsum("bqh,bqhk->bhk", wexp, kcc)
+        C_new = scale_prev[:, :, None, None] * Cst + C_loc
+        n_new = scale_prev[:, :, None] * nst + n_loc
+        return (C_new, n_new, m_new), (Cst, nst, mst)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    axes = lambda t: jnp.moveaxis(t, 1, 0)
+    (_, _, _), (C_in, n_in, m_in) = jax.lax.scan(
+        scan_fn, (C0, n0, m0), (axes(kc), axes(vc), axes(igc), axes(cum), axes(total))
+    )
+    C_in = jnp.moveaxis(C_in, 0, 1)  # (B,nc,H,hd,hd) state entering each chunk
+    n_in = jnp.moveaxis(n_in, 0, 1)
+    m_in = jnp.moveaxis(m_in, 0, 1)  # (B,nc,H)
+
+    # Stabilized combination of intra and inter parts.
+    m_intra = jnp.max(jnp.where(jnp.isfinite(logD), logD, -1e30), axis=3)  # (B,nc,Q,H)
+    m_inter = cum + m_in[:, :, None, :]  # log weight scale of inter contribution
+    m_row = jnp.maximum(m_intra, m_inter)  # (B,nc,Q,H)
+    Dexp = jnp.exp(jnp.where(jnp.isfinite(logD), logD - m_row[:, :, :, None, :], -jnp.inf))
+    Dexp = jnp.where(causal[None, None, :, :, None], Dexp, 0.0)
+
+    qk = jnp.einsum("bcqhd,bcthd->bcqth", qc, kc)
+    y_intra = jnp.einsum("bcqth,bcthv->bcqhv", qk * Dexp, vc)
+    # mLSTM normalizer: n = sum_t D_t k_t (+ inter part), denom = max(|q.n|, exp(-m)).
+    n_intra = jnp.einsum("bcqth,bcthd->bcqhd", Dexp, kc)
+
+    w_inter = jnp.exp(m_inter - m_row)  # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqhd,bchdv,bcqh->bcqhv", qc, C_in, w_inter)
+    n_inter = n_in[:, :, None, :, :] * w_inter[..., None]  # (B,nc,Q,H,hd)
+
+    num = y_intra + y_inter  # (B,nc,Q,H,hd)
+    nvec = n_intra + n_inter  # (B,nc,Q,H,hd)
+    denom = jnp.abs(jnp.einsum("bcqhd,bcqhd->bcqh", qc, nvec))
+    denom = jnp.maximum(denom, jnp.exp(-m_row))  # xLSTM: max(|q.n|, exp(-m))
+    y = num / denom[..., None]
+
+    y = y.reshape(B, S, di).astype(xin.dtype)
+    y = rms_norm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return dense(params["down"], y)
+
+
+def init_mlstm_cache(cfg, batch):
+    d = cfg.d_model
+    x = cfg.xlstm
+    di = int(x.proj_factor * d)
+    H = cfg.num_heads
+    hd = di // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params, xin, cfg, cache):
+    """One-token recurrent mLSTM step. xin: (B,1,d)."""
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = int(x.proj_factor * d)
+    H = cfg.num_heads
+    hd = di // H
+    B = xin.shape[0]
+    up = dense(params["up"], xin[:, 0])
+    xi, z = up[..., :di], up[..., di:]
+    q = dense(params["q"], xi).reshape(B, H, hd).astype(jnp.float32)
+    k = dense(params["k"], xi).reshape(B, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    v = dense(params["v"], xi).reshape(B, H, hd).astype(jnp.float32)
+    ig = dense(params["igate"], xi).astype(jnp.float32)  # (B,H)
+    fg = jax.nn.log_sigmoid(dense(params["fgate"], xi).astype(jnp.float32))
+
+    m_new = jnp.maximum(fg + cache["m"], ig)
+    scale_prev = jnp.exp(fg + cache["m"] - m_new)
+    scale_in = jnp.exp(ig - m_new)
+    C = scale_prev[:, :, None, None] * cache["C"] + scale_in[:, :, None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k, v
+    )
+    n = scale_prev[:, :, None] * cache["n"] + scale_in[:, :, None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    y = (num / denom[..., None]).reshape(B, di).astype(xin.dtype)
+    y = rms_norm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = dense(params["down"], y)
+    return out[:, None], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ks = jax.random.split(key, 4)
+    # 4 gates (i, f, z, o), each with input weights and per-head recurrent
+    # block-diagonal weights.
+    return {
+        "w_in": init_dense(ks[0], d, 4 * d, dtype=dtype),
+        "r": (jax.random.normal(ks[1], (4, H, hd, hd)) * (1.0 / jnp.sqrt(hd))).astype(dtype),
+        "bias": jnp.zeros((4 * d,), dtype=jnp.float32),
+        "down": init_dense(ks[2], d, d, dtype=dtype),
+        "norm": init_rmsnorm(d, dtype=dtype),
+    }
+
+
+def init_slstm_cache(cfg, batch):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def _slstm_cell(params, cfg, xt, state):
+    """One sLSTM time step. xt: (B, 4*d) pre-computed input projection."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("ghkv,bhk->bghv", params["r"].astype(jnp.float32), h)  # (B,4,H,hd)
+    pre = xt.reshape(-1, 4, H, hd).astype(jnp.float32) + rec + params["bias"].reshape(
+        4, H, hd
+    )
+    it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    # Exponential gating with stabilizer state m (per head: use max over dims).
+    it_s = jnp.max(it, axis=-1)  # (B,H) head-level log input gate scale
+    ft_s = jax.nn.log_sigmoid(jnp.mean(ft, axis=-1))  # (B,H)
+    m_new = jnp.maximum(ft_s + m, it_s)
+    i_gate = jnp.exp(it - m_new[..., None])
+    f_gate = jnp.exp(ft_s + m - m_new)[..., None]
+    c_new = f_gate * c + i_gate * jnp.tanh(zt)
+    n_new = f_gate * n + i_gate
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(params, xin, cfg):
+    """Sequential sLSTM over the sequence. xin: (B,S,d)."""
+    B, S, d = xin.shape
+    xproj = dense(params["w_in"], xin)  # (B,S,4d)
+
+    state0 = init_slstm_cache(cfg, B)
+
+    def step(state, xt):
+        new = _slstm_cell(params, cfg, xt, state)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(xproj, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(xin.dtype)
+    y = rms_norm(params["norm"], y, cfg.norm_eps)
+    return dense(params["down"], y)
+
+
+def slstm_decode(params, xin, cfg, cache):
+    xt = dense(params["w_in"], xin[:, 0])
+    new = _slstm_cell(params, cfg, xt, cache)
+    y = new["h"].reshape(xin.shape[0], cfg.d_model).astype(xin.dtype)
+    y = rms_norm(params["norm"], y, cfg.norm_eps)
+    return dense(params["down"], y)[:, None], new

@@ -1,0 +1,164 @@
+"""Full xLSTM language model: mLSTM backbone with periodic sLSTM blocks
+(xLSTM[a:b] pattern). Per-type stacked params with index-mapped gathers
+inside the layer scan (HLO: one mLSTM body + one sLSTM body).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import xlstm
+from repro.models.layers import (
+    cross_entropy_loss,
+    dtype_of,
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    rms_norm,
+    unembed,
+)
+
+
+def _layer_types(cfg):
+    every = cfg.xlstm.slstm_every
+    is_s = [(i % every == every - 1) for i in range(cfg.num_layers)]
+    return is_s
+
+
+def init_params(key, cfg):
+    dtype = dtype_of(cfg)
+    ke, km, ks, kh = jax.random.split(key, 4)
+    is_s = _layer_types(cfg)
+    n_s = sum(is_s)
+    n_m = cfg.num_layers - n_s
+    mkeys = jax.random.split(km, max(n_m, 1))
+    skeys = jax.random.split(ks, max(n_s, 1))
+    params = {
+        "embed": init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "mlstm": jax.vmap(lambda k: xlstm.init_mlstm(k, cfg, dtype))(mkeys),
+        "slstm": jax.vmap(lambda k: xlstm.init_slstm(k, cfg, dtype))(skeys),
+        "ln_m": jax.vmap(lambda k: init_rmsnorm(cfg.d_model, dtype))(mkeys),
+        "ln_s": jax.vmap(lambda k: init_rmsnorm(cfg.d_model, dtype))(skeys),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(kh, cfg.padded_vocab, cfg.d_model, dtype)
+    return params
+
+
+def _indices(cfg):
+    is_s = _layer_types(cfg)
+    m_idx, s_idx = [], []
+    mi = si = 0
+    for flag in is_s:
+        if flag:
+            s_idx.append(si)
+            m_idx.append(0)
+            si += 1
+        else:
+            m_idx.append(mi)
+            s_idx.append(0)
+            mi += 1
+    return (
+        jnp.asarray(is_s, dtype=bool),
+        jnp.asarray(m_idx, dtype=jnp.int32),
+        jnp.asarray(s_idx, dtype=jnp.int32),
+    )
+
+
+def forward(params, tokens, cfg, remat=True, last_only=False):
+    from repro.models.sharding import constrain_batch
+
+    x = constrain_batch(embed(params["embed"], tokens))
+    is_s, m_idx, s_idx = _indices(cfg)
+
+    def body(x, flag, mi, si):
+        def s_branch(x):
+            p = jax.tree.map(lambda a: a[si], params["slstm"])
+            ln = jax.tree.map(lambda a: a[si], params["ln_s"])
+            return x + xlstm.slstm_forward(p, rms_norm(ln, x, cfg.norm_eps), cfg)
+
+        def m_branch(x):
+            p = jax.tree.map(lambda a: a[mi], params["mlstm"])
+            ln = jax.tree.map(lambda a: a[mi], params["ln_m"])
+            return x + xlstm.mlstm_forward(p, rms_norm(ln, x, cfg.norm_eps), cfg)
+
+        return jax.lax.cond(flag, s_branch, m_branch, x)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, inp):
+        flag, mi, si = inp
+        return constrain_batch(body(x, flag, mi, si)), None
+
+    x, _ = jax.lax.scan(scan_fn, x, (is_s, m_idx, s_idx))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(params.get("lm_head", params["embed"]), x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, remat=True):
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens[:, :-1], cfg, remat=remat)
+    return cross_entropy_loss(logits, tokens[:, 1:]) + aux
+
+
+def init_cache(params, cfg, batch, max_len):
+    is_s = _layer_types(cfg)
+    n_s = max(sum(is_s), 1)
+    n_m = max(len(is_s) - sum(is_s), 1)
+    mc = xlstm.init_mlstm_cache(cfg, batch)
+    sc = xlstm.init_slstm_cache(cfg, batch)
+    return {
+        "mlstm": jax.tree.map(lambda c: jnp.broadcast_to(c, (n_m, *c.shape)), mc),
+        "slstm": jax.tree.map(lambda c: jnp.broadcast_to(c, (n_s, *c.shape)), sc),
+    }
+
+
+def decode_step(params, token, cfg, caches, pos):
+    x = embed(params["embed"], token)
+    is_s, m_idx, s_idx = _indices(cfg)
+
+    def scan_fn(carry, inp):
+        x, mcaches, scaches = carry
+        flag, mi, si = inp
+
+        def s_branch(op):
+            x, mcaches, scaches = op
+            p = jax.tree.map(lambda a: a[si], params["slstm"])
+            ln = jax.tree.map(lambda a: a[si], params["ln_s"])
+            cache = jax.tree.map(lambda c: c[si], scaches)
+            h, new = xlstm.slstm_decode(p, rms_norm(ln, x, cfg.norm_eps), cfg, cache)
+            scaches = jax.tree.map(
+                lambda allc, c: jax.lax.dynamic_update_index_in_dim(allc, c, si, 0),
+                scaches,
+                new,
+            )
+            return x + h, mcaches, scaches
+
+        def m_branch(op):
+            x, mcaches, scaches = op
+            p = jax.tree.map(lambda a: a[mi], params["mlstm"])
+            ln = jax.tree.map(lambda a: a[mi], params["ln_m"])
+            cache = jax.tree.map(lambda c: c[mi], mcaches)
+            h, new = xlstm.mlstm_decode(p, rms_norm(ln, x, cfg.norm_eps), cfg, cache)
+            mcaches = jax.tree.map(
+                lambda allc, c: jax.lax.dynamic_update_index_in_dim(allc, c, mi, 0),
+                mcaches,
+                new,
+            )
+            return x + h, mcaches, scaches
+
+        carry = jax.lax.cond(flag, s_branch, m_branch, (x, mcaches, scaches))
+        return carry, None
+
+    (x, new_m, new_s), _ = jax.lax.scan(
+        scan_fn, (x, caches["mlstm"], caches["slstm"]), (is_s, m_idx, s_idx)
+    )
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params.get("lm_head", params["embed"]), x)
+    return logits, {"mlstm": new_m, "slstm": new_s}

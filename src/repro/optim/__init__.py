@@ -1,0 +1,3 @@
+from repro.optim.optimizers import adamw, apply_updates, sgd
+
+__all__ = ["sgd", "adamw", "apply_updates"]

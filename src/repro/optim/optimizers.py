@@ -1,0 +1,66 @@
+"""Minimal optax-style optimizers (dependency-free).
+
+The paper's update IS the optimizer for P2P training (repro.core.spmd); these
+exist for the centralized baselines the paper compares against (single global
+model, local-only training) and for the train driver's --optimizer flag.
+
+Each factory returns (init_fn, update_fn):
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+        new_state = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads
+        )
+        return jax.tree.map(lambda m: -lr * m, new_state), new_state
+
+    return init, update
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "mu": jax.tree.map(z, params),
+            "nu": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        mhat = jax.tree.map(lambda m: m / (1 - b1 ** t.astype(jnp.float32)), mu)
+        vhat = jax.tree.map(lambda v: v / (1 - b2 ** t.astype(jnp.float32)), nu)
+        upd = jax.tree.map(
+            lambda m, v, p: -lr * (m / (jnp.sqrt(v) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            mhat, vhat, params,
+        )
+        return upd, {"mu": mu, "nu": nu, "t": t}
+
+    return init, update

@@ -1,0 +1,3 @@
+from repro.roofline.analysis import analyze_compiled, collective_bytes, roofline_terms
+
+__all__ = ["analyze_compiled", "collective_bytes", "roofline_terms"]

@@ -1,0 +1,232 @@
+"""Loop-aware cost extraction from optimized (SPMD-partitioned) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` visits a ``while`` body
+ONCE, so any scan-over-layers program under-reports FLOPs/bytes/collectives
+by ~num_layers x. The HLO text, however, carries
+``backend_config={"known_trip_count":{"n":...}}`` on every while op, so we
+can recover exact loop-weighted totals:
+
+* FLOPs: every ``dot`` contributes 2 * prod(result_dims) * prod(contracting
+  dims of the lhs) — the MAC-x2 convention, matching the roofline peak.
+* bytes: every top-level op (fusions count their operands + results, their
+  internals stay on-chip) contributes operand+result bytes — an HBM-traffic
+  model equivalent to HloCostAnalysis's "bytes accessed".
+* collectives: by kind, using per-op formulas (all-gather: result bytes;
+  all-reduce: 2x operand; reduce-scatter / all-to-all / collective-permute:
+  operand bytes). ``-start``/``-done`` async pairs are counted once.
+
+Weighting: while bodies x trip_count; fusion/call bodies x1; conditionals
+take the max over branches (an approximation for interleaved-block archs,
+noted in EXPERIMENTS.md); reduce/sort ``to_apply`` scalar lambdas are
+ignored.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+|[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*?)\)(.*)$"
+)
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_TRIP = re.compile(r"known_trip_count\D+(\d+)")
+
+COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+NO_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+                "while", "conditional", "call", "after-all", "add-dependency",
+                "partition-id", "replica-id", "iota", "reshape", "fusion"}
+# fusion bytes are counted from its own operands/result below (special case).
+
+
+def _shape_list(type_str):
+    """[(dtype, [dims...]), ...] for a (possibly tuple) HLO type string."""
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        dl = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dt, dl))
+    return out
+
+
+def _bytes_of(type_str):
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    attrs: str
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other, mult=1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] += mult * v
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] += mult * v
+
+
+def parse_computations(text):
+    comps = {}
+    cur_name, cur_ops = None, []
+    for line in text.splitlines():
+        m = _COMP_HEADER.match(line)
+        if m:
+            cur_name = m.group(1).lstrip("%")
+            cur_ops = []
+            comps[cur_name] = cur_ops
+            continue
+        if cur_name is None:
+            continue
+        if line.strip() == "}":
+            cur_name = None
+            continue
+        om = _OP_LINE.match(line)
+        if not om:
+            continue
+        name, type_str, opcode, operand_str, attrs = om.groups()
+        operands = re.findall(r"%[\w.\-]+", operand_str)
+        cur_ops.append(Op(name.lstrip("%"), type_str, opcode, [o.lstrip("%") for o in operands], attrs))
+    return comps
+
+
+def _called(attrs, key):
+    m = re.search(key + r"=(%[\w.\-]+)", attrs)
+    return m.group(1).lstrip("%") if m else None
+
+
+def _branches(attrs):
+    m = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+    if m:
+        return [b.strip().lstrip("%") for b in m.group(1).split(",")]
+    out = []
+    for key in ("true_computation", "false_computation"):
+        c = _called(attrs, key)
+        if c:
+            out.append(c)
+    return out
+
+
+def _dot_flops(op, symtab):
+    result = _shape_list(op.type_str)
+    if not result:
+        return 0.0
+    rnum = 1
+    for d in result[0][1]:
+        rnum *= d
+    lhs_t = symtab.get(op.operands[0]) if op.operands else None
+    m = re.search(r"lhs_contracting_dims=\{([^}]*)\}", op.attrs)
+    contract = 1
+    if lhs_t and m and m.group(1).strip():
+        lhs_shapes = _shape_list(lhs_t)
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * rnum * contract
+
+
+def analyze_hlo(text, entry=None):
+    comps = parse_computations(text)
+    memo = {}
+
+    def comp_totals(name):
+        if name in memo:
+            return memo[name]
+        t = Totals()
+        memo[name] = t  # guard cycles (none expected)
+        ops = comps.get(name, [])
+        symtab = {op.name: op.type_str for op in ops}
+        for op in ops:
+            oc = op.opcode
+            if oc == "dot":
+                t.flops += _dot_flops(op, symtab)
+                t.bytes += _bytes_of(op.type_str)
+                t.bytes += sum(_bytes_of(symtab.get(o, "")) for o in op.operands)
+            elif oc == "fusion":
+                sub = _called(op.attrs, "calls")
+                if sub:
+                    st = comp_totals(sub)
+                    t.flops += st.flops  # dots inside the fusion
+                # HBM traffic: fusion boundary only
+                t.bytes += _bytes_of(op.type_str)
+                t.bytes += sum(_bytes_of(symtab.get(o, "")) for o in op.operands)
+            elif oc == "while":
+                body = _called(op.attrs, "body")
+                cond = _called(op.attrs, "condition")
+                trip = 1
+                tm = _TRIP.search(op.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                if body:
+                    t.add(comp_totals(body), trip)
+                if cond:
+                    t.add(comp_totals(cond), trip)
+            elif oc == "conditional":
+                brs = _branches(op.attrs)
+                if brs:
+                    sub_totals = [comp_totals(b) for b in brs]
+                    best = max(sub_totals, key=lambda s: (s.flops, s.bytes))
+                    t.add(best, 1.0)
+            elif oc == "call":
+                sub = _called(op.attrs, "to_apply")
+                if sub:
+                    t.add(comp_totals(sub), 1.0)
+            else:
+                base = oc.replace("-start", "")
+                if base in COLLECTIVES:
+                    if oc.endswith("-done"):
+                        continue
+                    opnd = sum(_bytes_of(symtab.get(o, "")) for o in op.operands)
+                    res = _bytes_of(op.type_str)
+                    if base == "all-gather":
+                        val = res
+                    elif base == "all-reduce":
+                        val = 2 * (opnd or res)
+                    else:
+                        val = opnd or res
+                    t.coll[base] += val
+                    t.coll_counts[base] += 1
+                    t.bytes += res + opnd
+                elif oc not in NO_BYTES_OPS:
+                    t.bytes += _bytes_of(op.type_str)
+                    t.bytes += sum(_bytes_of(symtab.get(o, "")) for o in op.operands)
+        return t
+
+    if entry is None:
+        # the ENTRY computation is the one a) named like main or b) not
+        # referenced by any other computation; find via header text.
+        m = re.search(r"^ENTRY\s+(%?[\w.\-]+)", text, re.M)
+        entry = m.group(1).lstrip("%") if m else next(iter(comps))
+    return comp_totals(entry)

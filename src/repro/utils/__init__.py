@@ -1,0 +1,17 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_axpy,
+    tree_global_norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_global_norm",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+]

@@ -1,0 +1,48 @@
+"""Small pytree helpers used across the framework.
+
+These are deliberately dependency-free (no optax) — the paper's block
+coordinate descent update is applied leaf-wise to parameter pytrees by the
+SPMD layer, and the simulator works on dense (n, p) arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(s, a, b):
+    """b + s * a, leaf-wise."""
+    return jax.tree.map(lambda x, y: y + s * x, a, b)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_global_norm(a):
+    leaves = jax.tree.leaves(a)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size(a):
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)

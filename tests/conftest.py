@@ -1,0 +1,13 @@
+"""Test configuration.
+
+x64 is enabled because the paper-faithful core (objectives, DP accounting,
+convergence-rate checks) needs float64 for finite-difference and theory
+assertions. Model/smoke/kernel tests pass explicit dtypes (f32/bf16) and are
+unaffected. The dry-run runs in its own process (launch/dryrun.py) and does
+NOT inherit this — nor the 512-device XLA flag, which is deliberately not set
+here (smoke tests must see 1 device).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

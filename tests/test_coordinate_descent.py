@@ -1,0 +1,95 @@
+"""Convergence tests for the non-private algorithm (Sec. 2.3, Prop. 1)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AgentData,
+    make_objective,
+    proposition1_bound,
+    run,
+    run_scan,
+    synchronous_round,
+)
+from repro.data.synthetic import linear_classification_problem
+
+
+@pytest.fixture(scope="module")
+def quad_problem():
+    prob = linear_classification_problem(n=10, p=6, m_low=5, m_high=15, seed=3)
+    X = prob.train.X
+    y = np.einsum("nmp,np->nm", X, prob.targets) * prob.train.mask
+    data = AgentData(X=X, y=y, mask=prob.train.mask)
+    obj = make_objective(prob.graph, data, "quadratic", mu=0.5)
+    return obj
+
+
+def test_cd_converges_to_exact_optimum(quad_problem):
+    obj = quad_problem
+    Theta_star = obj.solve_exact()
+    q_star = float(obj.value(Theta_star))
+    rng = np.random.default_rng(0)
+    res = run_scan(obj, np.zeros((obj.n, obj.p)), T=1500, rng=rng)
+    assert res.objective[-1] - q_star < 1e-4 * max(1.0, abs(q_star))
+    assert np.abs(res.Theta - Theta_star).max() < 1e-2
+
+
+def test_cd_monotone_descent_in_objective(quad_problem):
+    """Each exact block-CD step with 1/L_i step size cannot increase Q."""
+    obj = quad_problem
+    rng = np.random.default_rng(1)
+    res = run_scan(obj, np.zeros((obj.n, obj.p)), T=300, rng=rng)
+    diffs = np.diff(res.objective)
+    assert np.all(diffs <= 1e-6)
+
+
+def test_python_and_scan_paths_agree(quad_problem):
+    obj = quad_problem
+    rng = np.random.default_rng(2)
+    wake = rng.integers(0, obj.n, size=50)
+    r1 = run(obj, np.zeros((obj.n, obj.p)), T=50, rng=rng, wake_sequence=wake)
+    r2 = run_scan(obj, np.zeros((obj.n, obj.p)), T=50, rng=rng, wake_sequence=wake)
+    np.testing.assert_allclose(r1.Theta, r2.Theta, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(r1.objective, r2.objective, rtol=1e-5, atol=1e-6)
+
+
+def test_proposition1_bound_holds_in_expectation(quad_problem):
+    """Averaged over wake sequences, the suboptimality gap must respect
+    Prop. 1's linear rate (up to Monte-Carlo slack)."""
+    obj = quad_problem
+    q_star = float(obj.value(obj.solve_exact()))
+    T = 400
+    gaps = []
+    for s in range(5):
+        rng = np.random.default_rng(100 + s)
+        res = run_scan(obj, np.zeros((obj.n, obj.p)), T=T, rng=rng)
+        gaps.append(res.objective - q_star)
+    mean_gap = np.mean(gaps, axis=0)
+    bound = proposition1_bound(obj, mean_gap[0], T)
+    # The bound must hold (with slack for MC noise) and be non-trivial.
+    assert np.all(mean_gap <= bound * 1.5 + 1e-8)
+    assert mean_gap[-1] < mean_gap[0] * 0.05
+
+
+def test_synchronous_round_reaches_same_fixed_point(quad_problem):
+    """DESIGN §4.2: the SPMD synchronous-round variant optimizes the same Q."""
+    import jax.numpy as jnp
+
+    obj = quad_problem
+    Theta_star = obj.solve_exact()
+    Theta = jnp.zeros((obj.n, obj.p))
+    for _ in range(400):
+        Theta = synchronous_round(obj, Theta)
+    assert np.abs(np.asarray(Theta) - Theta_star).max() < 1e-3
+    # And the optimum is a fixed point.
+    stepped = synchronous_round(obj, jnp.asarray(Theta_star))
+    np.testing.assert_allclose(np.asarray(stepped), Theta_star, rtol=1e-6, atol=1e-7)
+
+
+def test_message_accounting(quad_problem):
+    obj = quad_problem
+    rng = np.random.default_rng(5)
+    wake = np.array([0, 1, 2])
+    res = run(obj, np.zeros((obj.n, obj.p)), T=3, rng=rng, wake_sequence=wake)
+    expected = sum(len(obj.graph.neighbors(i)) for i in wake)
+    assert res.messages[-1] == expected

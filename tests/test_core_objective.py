@@ -1,0 +1,81 @@
+"""Unit tests for the objective (Eq. 2/3) and its theory constants."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AgentData,
+    make_objective,
+    ring_graph,
+    complete_graph,
+)
+from repro.data.synthetic import linear_classification_problem
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    return linear_classification_problem(n=12, p=8, m_low=5, m_high=20, test_points=20, seed=1)
+
+
+def test_graph_constructors():
+    g = ring_graph(8)
+    assert g.is_connected()
+    assert g.num_edges() == 8
+    assert np.allclose(g.degrees, 2.0)
+    gc = complete_graph(5, weight=2.0)
+    assert np.allclose(gc.degrees, 8.0)
+
+
+def test_block_grad_matches_finite_differences(small_problem):
+    prob = small_problem
+    obj = make_objective(prob.graph, prob.train, "logistic", mu=0.3)
+    rng = np.random.default_rng(0)
+    Theta = rng.normal(size=(obj.n, obj.p)).astype(np.float32)
+    err = obj.grad_check(Theta)
+    assert err < 1e-2  # float32 fd tolerance
+
+
+def test_eq4_is_scaled_block_gradient_step(small_problem):
+    """Eq. 4's convex-combination form must equal Theta_i - [grad Q]_i / L_i."""
+    import jax.numpy as jnp
+
+    from repro.core.coordinate_descent import _cd_step
+
+    prob = small_problem
+    obj = make_objective(prob.graph, prob.train, "logistic", mu=0.3)
+    rng = np.random.default_rng(1)
+    Theta = jnp.asarray(rng.normal(size=(obj.n, obj.p)), jnp.float32)
+    L = obj.block_lipschitz()
+    g = np.asarray(obj.block_grad(Theta))
+    for i in [0, 3, 7]:
+        stepped = np.asarray(_cd_step(obj, Theta, i))
+        expected = np.asarray(Theta[i]) - g[i] / L[i]
+        np.testing.assert_allclose(stepped[i], expected, rtol=2e-4, atol=2e-5)
+
+
+def test_quadratic_closed_form_is_stationary(small_problem):
+    prob = small_problem
+    # Reuse geometry but quadratic targets: y = <x, t> + noise.
+    X = prob.train.X
+    y = np.einsum("nmp,np->nm", X, prob.targets) * prob.train.mask
+    data = AgentData(X=X, y=y, mask=prob.train.mask)
+    obj = make_objective(prob.graph, data, "quadratic", mu=0.5)
+    Theta_star = obj.solve_exact()
+    g = np.asarray(obj.block_grad(Theta_star.astype(np.float32)))
+    assert np.abs(g).max() < 1e-3
+
+
+def test_theory_constants_positive(small_problem):
+    prob = small_problem
+    obj = make_objective(prob.graph, prob.train, "logistic", mu=0.3)
+    assert obj.strong_convexity() > 0
+    assert np.all(obj.block_lipschitz() > 0)
+    assert 0 < obj.contraction() < 1
+    assert np.all((obj.alphas() > 0) & (obj.alphas() <= 1))
+    assert np.isfinite(obj.lipschitz_l1())
+
+
+def test_clip_bounds_lipschitz(small_problem):
+    prob = small_problem
+    obj = make_objective(prob.graph, prob.train, "logistic", mu=0.3, clip=0.05)
+    assert obj.lipschitz_l1() <= 0.05

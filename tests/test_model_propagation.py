@@ -1,0 +1,70 @@
+"""Tests for Supp. C: model propagation + private warm start."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    make_objective,
+    run_scan,
+    train_local_models,
+    private_local_models,
+    private_warm_start,
+)
+from repro.core.model_propagation import propagation_objective, run_propagation
+from repro.data.synthetic import linear_classification_problem, eval_accuracy
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return linear_classification_problem(n=12, p=8, m_low=10, m_high=60, seed=11)
+
+
+def test_propagation_converges_to_closed_form(problem):
+    n, p = 12, 8
+    rng = np.random.default_rng(0)
+    theta_loc = rng.normal(size=(n, p))
+    from repro.core.graph import confidences as conf
+
+    c = conf(problem.train.num_examples)
+    value, solve = propagation_objective(problem.graph, theta_loc, mu=0.5, confidences=c)
+    star = solve()
+    out = run_propagation(problem.graph, theta_loc, 0.5, c, T=2000, rng=rng)
+    assert np.abs(out - star).max() < 1e-6
+    assert value(out) <= value(theta_loc) + 1e-12
+
+
+def test_local_models_fit_training_data(problem):
+    theta_loc = train_local_models(
+        problem.train, __import__("repro.core.objective", fromlist=["LOGISTIC"]).LOGISTIC,
+        1.0 / np.maximum(problem.train.num_examples, 1.0),
+    )
+    acc = eval_accuracy(theta_loc, problem.test)
+    assert acc.mean() > 0.6  # clearly better than chance
+
+
+def test_private_local_models_noise_scales(problem):
+    rng = np.random.default_rng(1)
+    theta = np.zeros((12, 8))
+    lam = 1.0 / np.maximum(problem.train.num_examples, 1.0)
+    m = problem.train.num_examples
+    priv = private_local_models(theta, 1.0, lam, m, eps=1e8, rng=rng)
+    # Huge eps -> negligible noise.
+    assert np.abs(priv).max() < 1e-4
+    priv2 = private_local_models(theta, 1.0, lam, m, eps=0.1, rng=rng)
+    assert np.abs(priv2).max() > np.abs(priv).max()
+
+
+def test_private_warm_start_beats_constant_init(problem):
+    """Fig. 2(b): warm start yields lower objective at the same tick count."""
+    obj = make_objective(problem.graph, problem.train, "logistic", mu=0.3, clip=1.0)
+    rng = np.random.default_rng(2)
+    # n=12 agents only -> propagation averages little noise away; a clearly
+    # beneficial warm start needs a larger eps_warm than the paper's n=100.
+    warm = private_warm_start(obj, eps_warm=2.0, rng=rng)
+    const = 2.0 * np.ones((obj.n, obj.p))
+    q_warm = float(obj.value(warm.astype(np.float64)))
+    q_const = float(obj.value(const))
+    assert q_warm < q_const
+    # And more warm-start budget helps (less noise on the local models).
+    warm_hi = private_warm_start(obj, eps_warm=50.0, rng=np.random.default_rng(3))
+    assert float(obj.value(warm_hi.astype(np.float64))) < q_warm

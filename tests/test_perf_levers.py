@@ -1,0 +1,81 @@
+"""Numerical-equivalence tests for the §Perf optimization levers: layout
+changes must never change model semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+
+
+@pytest.fixture
+def cfg():
+    return ModelConfig(
+        name="t", family="dense", num_layers=1, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16, dtype="float32",
+    )
+
+
+def test_chunked_attention_matches_dense(cfg, monkeypatch):
+    """The flash-style q-block path must equal the dense path exactly."""
+    monkeypatch.setattr(attn_mod, "CHUNKED_ATTN_THRESHOLD", 10**9)
+    params = attn_mod.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2048, 64), jnp.float32)
+    dense_out, _ = attn_mod.attention(params, x, cfg)
+    monkeypatch.setattr(attn_mod, "CHUNKED_ATTN_THRESHOLD", 1024)
+    chunked_out, _ = attn_mod.attention(params, x, cfg)
+    np.testing.assert_allclose(
+        np.asarray(dense_out), np.asarray(chunked_out), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_chunked_attention_matches_dense_windowed(cfg, monkeypatch):
+    import dataclasses
+
+    wcfg = dataclasses.replace(cfg, sliding_window=256)
+    params = attn_mod.init_attention(jax.random.PRNGKey(0), wcfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 2048, 64), jnp.float32)
+    monkeypatch.setattr(attn_mod, "CHUNKED_ATTN_THRESHOLD", 10**9)
+    dense_out, _ = attn_mod.attention(params, x, wcfg, window=256)
+    monkeypatch.setattr(attn_mod, "CHUNKED_ATTN_THRESHOLD", 1024)
+    chunked_out, _ = attn_mod.attention(params, x, wcfg, window=256)
+    np.testing.assert_allclose(
+        np.asarray(dense_out), np.asarray(chunked_out), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_repeat_kv_cache_decode_equivalence(cfg):
+    """Decode with the pre-repeated KV cache layout must produce identical
+    logits to the GQA-compact layout."""
+    params = attn_mod.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x_steps = jax.random.normal(jax.random.PRNGKey(2), (4, 2, 1, 64), jnp.float32)
+
+    def run(flag):
+        attn_mod.set_repeat_kv_cache(flag)
+        try:
+            cache = attn_mod.init_cache(cfg, 2, 16, jnp.float32)
+            outs = []
+            for i in range(4):
+                y, cache = attn_mod.decode_attention(params, x_steps[i], cfg, cache,
+                                                     jnp.int32(i))
+                outs.append(np.asarray(y))
+            return np.stack(outs)
+        finally:
+            attn_mod.set_repeat_kv_cache(False)
+
+    np.testing.assert_allclose(run(False), run(True), rtol=1e-5, atol=1e-6)
+
+
+def test_seq_axis_constraint_noop_without_mesh():
+    """constrain_seq must be the identity when no TP mesh context exists."""
+    from repro.models.sharding import constrain_seq, set_seq_axis
+
+    x = jnp.ones((2, 8, 4))
+    set_seq_axis("model")
+    try:
+        y = constrain_seq(x)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    finally:
+        set_seq_axis(None)

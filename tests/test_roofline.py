@@ -1,0 +1,86 @@
+"""Unit tests for the roofline HLO parser (loop-trip weighting, dot FLOPs,
+collective byte formulas)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_parse import analyze_hlo, parse_computations
+from repro.roofline.analysis import collective_bytes
+
+
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    txt = _hlo_of(lambda a, b: a @ b, a, b)
+    t = analyze_hlo(txt)
+    assert t.flops == 2 * 64 * 128 * 32
+
+
+def test_scan_trip_weighting():
+    """FLOPs of a scanned matmul must scale with the trip count."""
+    w = jnp.eye(64, dtype=jnp.float32)
+
+    def body_n(n):
+        def f(x):
+            def step(c, _):
+                return c @ w, None
+
+            out, _ = jax.lax.scan(step, x, None, length=n)
+            return out
+
+        return f
+
+    x = jnp.ones((64, 64), jnp.float32)
+    t1 = analyze_hlo(_hlo_of(body_n(3), x))
+    t2 = analyze_hlo(_hlo_of(body_n(12), x))
+    assert t1.flops > 0
+    ratio = t2.flops / t1.flops
+    assert 3.5 <= ratio <= 4.5  # 12/3 = 4
+
+
+def test_bytes_positive_and_loop_scaled():
+    w = jnp.eye(32, dtype=jnp.float32)
+
+    def f(x):
+        def step(c, _):
+            return jnp.tanh(c @ w), None
+
+        out, _ = jax.lax.scan(step, x, None, length=10)
+        return out
+
+    t = analyze_hlo(_hlo_of(f, jnp.ones((32, 32), jnp.float32)))
+    assert t.bytes > 10 * 32 * 32 * 4  # at least one rw per iteration
+
+
+def test_collective_regex_on_synthetic_hlo():
+    txt = """
+ENTRY %main.1 (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[128,256]{1,0} all-gather(%p0), replica_groups={{0,1}}, dimensions={0}
+  %ar = f32[128,256]{1,0} all-reduce(%ag), to_apply=%add
+  ROOT %cp = f32[128,256]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    out = collective_bytes(txt)
+    sz = 128 * 256 * 4
+    assert out["all-gather"] == sz
+    assert out["all-reduce"] == 2 * sz
+    assert out["collective-permute"] == sz
+
+
+def test_parser_handles_tuple_headers():
+    def f(x):
+        def step(c, _):
+            return (c[0] + 1, c[1] * 2.0), None
+
+        out, _ = jax.lax.scan(step, (x, x), None, length=4)
+        return out
+
+    txt = _hlo_of(f, jnp.ones((8, 128), jnp.float32))
+    comps = parse_computations(txt)
+    assert len(comps) >= 2  # entry + loop body at least

@@ -1,0 +1,151 @@
+"""SPMD P2P layer tests.
+
+Single-device tests run inline; multi-device semantics (ppermute gossip vs
+dense mixing vs the simulator's synchronous round) run in a subprocess with
+8 XLA host devices so the main test process keeps seeing 1 device.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.configs.base import P2PConfig
+from repro.core import spmd
+from repro.models import build_model
+from repro.models.sharding import batch_specs, cache_specs, param_specs
+
+
+def make_mesh_1dev():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_train_step_single_device_runs_and_updates():
+    mesh = make_mesh_1dev()
+    cfg = get_reduced("llama3.2-1b", dtype="float32")
+    m = build_model(cfg, remat=False)
+    p2p = P2PConfig(agent_mode="full", dp_enabled=False, mu=0.3)
+    A = spmd.num_agents(mesh, "full")
+    params = jax.vmap(m.init)(jax.random.split(jax.random.PRNGKey(0), A))
+    batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (A, 2, 17)), jnp.int32)}
+    with jax.set_mesh(mesh):
+        step, _, _ = spmd.make_train_step(m, p2p, mesh, local_batch_size=2)
+        p1, metrics = jax.jit(step)(params, batch, jax.random.PRNGKey(1))
+        p2, m2 = jax.jit(step)(p1, batch, jax.random.PRNGKey(2))
+    assert np.isfinite(float(metrics["loss"]))
+    # local descent: loss must drop over a few rounds on the same batch
+    assert float(m2["loss"]) < float(metrics["loss"])
+
+
+def test_dp_noise_scale_follows_theorem1():
+    mesh = make_mesh_1dev()
+    cfg = get_reduced("llama3.2-1b", dtype="float32")
+    m = build_model(cfg, remat=False)
+    p2p = P2PConfig(agent_mode="full", dp_enabled=True, eps_bar=1.0, planned_rounds=10, clip=2.0)
+    with jax.set_mesh(mesh):
+        _, eps_step, noise_scale = spmd.make_train_step(m, p2p, mesh, local_batch_size=4)
+    from repro.core.privacy import invert_uniform_budget
+
+    want_eps = invert_uniform_budget(1.0, 10, p2p.delta_bar)
+    assert eps_step == pytest.approx(want_eps)
+    assert noise_scale == pytest.approx(2.0 * 2.0 / (want_eps * 4))
+
+
+def test_param_specs_divisibility_safe():
+    """No spec may shard a dim that the axis size does not divide."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_reduced("granite-moe-3b-a800m", dtype="float32")
+    m = build_model(cfg, remat=False)
+    params = jax.vmap(m.init)(jax.random.split(jax.random.PRNGKey(0), 1))
+    # Check against the production mesh sizes without building 256 devices:
+    # fake a mesh-shape lookup object.
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    specs = param_specs(params, FakeMesh(), "full", 16)
+    for leaf, spec in zip(jax.tree.leaves(params), jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))):
+        for dim, name in enumerate(spec):
+            if name is None:
+                continue
+            size = {"data": 16, "model": 16, ("pod", "data"): 32}.get(name, 16)
+            if isinstance(name, tuple):
+                size = 32
+            assert leaf.shape[dim] % size == 0 or leaf.shape[dim] == 1, (
+                f"{leaf.shape} dim {dim} not divisible by {name}"
+            )
+
+
+MULTIDEV_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.configs.base import P2PConfig
+    from repro.core import spmd
+    from repro.models import build_model
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_reduced("llama3.2-1b", dtype="float32")
+    m = build_model(cfg, remat=False)
+    A = spmd.num_agents(mesh, "full")
+    assert A == 4
+    params = jax.vmap(m.init)(jax.random.split(jax.random.PRNGKey(0), A))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (A, 2, 17)), jnp.int32)}
+
+    p2p_pp = P2PConfig(agent_mode="full", dp_enabled=False, mu=0.2,
+                       neighbor_offsets=(1,), gossip_dtype=None)
+    with jax.set_mesh(mesh):
+        step_pp, _, _ = spmd.make_train_step(m, p2p_pp, mesh, 2, gossip="ppermute")
+        step_dn, _, _ = spmd.make_train_step(m, p2p_pp, mesh, 2, gossip="dense")
+        out_pp, _ = jax.jit(step_pp)(params, batch, jax.random.PRNGKey(1))
+        out_dn, _ = jax.jit(step_dn)(params, batch, jax.random.PRNGKey(1))
+    for a, b in zip(jax.tree.leaves(out_pp), jax.tree.leaves(out_dn)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+    # ppermute mixing itself equals the circulant-matrix product.
+    from repro.models.sharding import param_specs
+    specs = param_specs(params, mesh, "full", A)
+    with jax.set_mesh(mesh):
+        mixed = jax.jit(lambda p: spmd.gossip_ppermute(p, specs, mesh, (1,), ("data",)))(params)
+    W = np.zeros((A, A))
+    for i in range(A):
+        W[i, (i + 1) % A] = W[i, (i - 1) % A] = 0.5
+    for leaf, ml in zip(jax.tree.leaves(params), jax.tree.leaves(mixed)):
+        want = np.einsum("ij,j...->i...", W, np.asarray(leaf, np.float64))
+        np.testing.assert_allclose(np.asarray(ml), want, rtol=2e-4, atol=2e-5)
+    print("MULTIDEV_OK")
+    """
+)
+
+
+def test_gossip_ppermute_matches_dense_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("JAX_ENABLE_X64", None)
+    res = subprocess.run(
+        [sys.executable, "-c", MULTIDEV_SCRIPT], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "MULTIDEV_OK" in res.stdout
+
+
+def test_decode_step_sharded_single_device():
+    mesh = make_mesh_1dev()
+    cfg = get_reduced("granite-3-8b", dtype="float32")
+    m = build_model(cfg, remat=False)
+    params = m.init(jax.random.PRNGKey(0))
+    caches = m.init_cache(params, 4, 32)
+    with jax.set_mesh(mesh):
+        logits, new_caches = jax.jit(m.decode)(params, jnp.zeros((4, 1), jnp.int32), caches, jnp.int32(5))
+    assert logits.shape == (4, 1, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))

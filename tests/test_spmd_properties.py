@@ -1,0 +1,83 @@
+"""Property-based tests on SPMD-layer invariants (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.spmd import _ring_perm, clip_and_noise, gossip_dense
+from repro.models.sharding import param_specs
+
+
+@given(st.integers(min_value=2, max_value=64), st.integers(min_value=1, max_value=63))
+@settings(max_examples=30, deadline=None)
+def test_ring_perm_is_permutation(n, shift):
+    perm = _ring_perm(n, shift % n)
+    srcs = [s for s, _ in perm]
+    dsts = [d for _, d in perm]
+    assert sorted(srcs) == list(range(n))
+    assert sorted(dsts) == list(range(n))
+
+
+@given(st.floats(min_value=0.1, max_value=10.0))
+@settings(max_examples=20, deadline=None)
+def test_clip_and_noise_enforces_sensitivity(clip):
+    """With zero noise, the output global norm never exceeds the clip."""
+    tree = {
+        "a": jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)) * 100, jnp.float32),
+        "b": jnp.asarray(np.random.default_rng(1).normal(size=(4,)) * 100, jnp.float32),
+    }
+    out = clip_and_noise(tree, jax.random.PRNGKey(0), clip, 0.0)
+    norm = float(jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(out))))
+    assert norm <= clip * (1 + 1e-5)
+
+
+def test_clip_and_noise_preserves_small_gradients():
+    tree = {"a": jnp.full((4, 4), 0.01, jnp.float32)}
+    out = clip_and_noise(tree, jax.random.PRNGKey(0), clip=100.0, noise_scale=0.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.01, rtol=1e-6)
+
+
+def test_gossip_dense_doubly_stochastic_fixed_point():
+    """Consensus invariance: identical agents are a fixed point of mixing."""
+    A = 8
+    W = np.zeros((A, A))
+    for i in range(A):
+        W[i, (i + 1) % A] = W[i, (i - 1) % A] = 0.5
+    mix = jnp.asarray(W)
+    tree = {"w": jnp.broadcast_to(jnp.arange(6.0).reshape(2, 3), (A, 2, 3))}
+    out = gossip_dense(tree, mix)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(tree["w"]), rtol=1e-6)
+
+
+def test_gossip_dense_mass_conservation():
+    """Row-stochastic symmetric mixing preserves the mean over agents."""
+    A = 6
+    W = np.zeros((A, A))
+    for i in range(A):
+        W[i, (i + 1) % A] = W[i, (i - 1) % A] = 0.5
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.normal(size=(A, 3, 2)), jnp.float32)}
+    out = gossip_dense(tree, jnp.asarray(W))
+    np.testing.assert_allclose(
+        np.asarray(out["w"]).mean(0), np.asarray(tree["w"]).mean(0), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_param_specs_structure_matches_params():
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    for arch in ["llama3.2-1b", "xlstm-1.3b", "zamba2-1.2b", "seamless-m4t-medium"]:
+        cfg = get_reduced(arch, dtype="float32")
+        m = build_model(cfg, remat=False)
+        params = jax.eval_shape(lambda: jax.vmap(m.init)(
+            jax.random.split(jax.random.PRNGKey(0), 2)))
+        specs = param_specs(params, FakeMesh(), "full", 16)
+        assert jax.tree.structure(params) == jax.tree.structure(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
