@@ -3,14 +3,24 @@
 # (Bellet, Guerraoui, Taziki, Tommasi, 2017).
 from repro.core.graph import (
     AgentGraph,
+    CSRGraph,
     angular_similarity_graph,
+    as_csr,
+    as_dense,
     circulant_graph,
     complete_graph,
     confidences,
+    csr_from_coo,
+    dense_weights,
     erdos_renyi_graph,
     knn_cosine_graph,
+    knn_graph,
+    neighbor_counts,
+    random_geometric_graph,
     ring_graph,
+    sparse_crossover,
 )
+from repro.core.mixing import MixOp, mix_op
 from repro.core.objective import (
     LOGISTIC,
     LOSSES,

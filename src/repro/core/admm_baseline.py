@@ -48,8 +48,8 @@ def run_admm(
     record_every: int = 1,
 ) -> ADMMResult:
     n, p = obj.n, obj.p
-    W = obj.graph.weights
-    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if W[i, j] > 0]
+    erows, ecols, evals = obj.graph.edge_list()
+    edges = list(zip(erows.tolist(), ecols.tolist()))
     E = len(edges)
     incident: list[list[int]] = [[] for _ in range(n)]
     for e, (i, j) in enumerate(edges):
@@ -132,7 +132,7 @@ def run_admm(
         #   (W_ij/2)||z_i - z_j||^2 + rho/2 (||z_i - a||^2 + ||z_j - b||^2)
         a = Theta[i] + u[e, 0]
         b = Theta[j] + u[e, 1]
-        w = W[i, j]
+        w = evals[e]
         denom = rho * (rho + 2.0 * w)
         z[e, 0] = ((rho + w) * rho * a + w * rho * b) / denom
         z[e, 1] = (w * rho * a + (rho + w) * rho * b) / denom

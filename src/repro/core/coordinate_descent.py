@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.graph import neighbor_counts
 from repro.core.objective import Objective
 
 
@@ -45,12 +46,11 @@ def sample_wake_sequence(n: int, T: int, rng: np.random.Generator) -> np.ndarray
 
 def cd_update(obj: Objective, Theta, i):
     """One Eq. 4 update for agent ``i``. jit-able; ``i`` may be traced."""
-    W = jnp.asarray(obj.graph.weights)
     d = jnp.asarray(obj.degrees)
     c = jnp.asarray(obj.confidences)
     alphas = jnp.asarray(obj.alphas())
     theta_i = Theta[i]
-    neigh = W[i] @ Theta / d[i]  # sum_j W_ij Theta_j / D_ii
+    neigh = obj.mix.row(Theta, i) / d[i]  # sum_j W_ij Theta_j / D_ii
     grad_i = obj.local_grad(Theta)[i]
     new_i = (1.0 - alphas[i]) * theta_i + alphas[i] * (neigh - obj.mu * c[i] * grad_i)
     return Theta.at[i].set(new_i)
@@ -81,7 +81,7 @@ def run(
     if wake_sequence is None:
         wake_sequence = sample_wake_sequence(n, T, rng)
     Theta = jnp.asarray(Theta0, dtype=jnp.float32)
-    deg_counts = np.array([len(obj.graph.neighbors(i)) for i in range(n)])
+    deg_counts = neighbor_counts(obj.graph)
     objective = [float(obj.value(Theta))]
     messages = [0.0]
     msg = 0.0
@@ -102,12 +102,11 @@ def run(
 
 
 def _cd_step(obj: Objective, Theta, i):
-    W = jnp.asarray(obj.graph.weights, dtype=Theta.dtype)
     d = jnp.asarray(obj.degrees, dtype=Theta.dtype)
     c = jnp.asarray(obj.confidences, dtype=Theta.dtype)
     alphas = jnp.asarray(obj.alphas(), dtype=Theta.dtype)
     theta_i = Theta[i]
-    neigh = W[i] @ Theta / d[i]
+    neigh = obj.mix.row(Theta, i) / d[i]
     grad_i = _single_agent_grad(obj, theta_i, i)
     new_i = (1.0 - alphas[i]) * theta_i + alphas[i] * (neigh - obj.mu * c[i] * grad_i)
     return Theta.at[i].set(new_i)
@@ -140,19 +139,17 @@ def run_scan(
         lap = jax.random.laplace(noise_key, shape=(T, p), dtype=jnp.float32)
         noise = lap * jnp.asarray(noise_scales, dtype=jnp.float32)[:, None]
 
-    W = jnp.asarray(obj.graph.weights, dtype=jnp.float32)
+    mix = obj.mix
     d = jnp.asarray(obj.degrees, dtype=jnp.float32)
     c = jnp.asarray(obj.confidences, dtype=jnp.float32)
     alphas = jnp.asarray(obj.alphas(), dtype=jnp.float32)
-    deg_counts = jnp.asarray(
-        np.array([len(obj.graph.neighbors(i)) for i in range(n)]), dtype=jnp.float32
-    )
+    deg_counts = jnp.asarray(neighbor_counts(obj.graph), dtype=jnp.float32)
 
     def step(carry, inp):
         Theta, msg = carry
         i, eta = inp
         theta_i = Theta[i]
-        neigh = W[i] @ Theta / d[i]
+        neigh = mix.row(Theta, i) / d[i]
         grad_i = _single_agent_grad(obj, theta_i, i) + eta
         new_i = (1.0 - alphas[i]) * theta_i + alphas[i] * (neigh - obj.mu * c[i] * grad_i)
         Theta = Theta.at[i].set(new_i)
@@ -185,11 +182,10 @@ def synchronous_round(obj: Objective, Theta):
     async ticks in expectation. Fixed points coincide with Eq. 4's: a round
     is ``Theta <- Theta - diag(1/L_i) grad Q(Theta)`` blockwise.
     """
-    W = jnp.asarray(obj.graph.weights, dtype=Theta.dtype)
     d = jnp.asarray(obj.degrees, dtype=Theta.dtype)
     c = jnp.asarray(obj.confidences, dtype=Theta.dtype)
     alphas = jnp.asarray(obj.alphas(), dtype=Theta.dtype)
-    neigh = (W @ Theta) / d[:, None]
+    neigh = obj.mix.all(Theta) / d[:, None]
     grads = obj.local_grad(Theta)
     return (1.0 - alphas[:, None]) * Theta + alphas[:, None] * (
         neigh - obj.mu * c[:, None] * grads

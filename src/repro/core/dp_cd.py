@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import privacy
 from repro.core.coordinate_descent import CDResult, sample_wake_sequence, _single_agent_grad
+from repro.core.graph import neighbor_counts
 from repro.core.objective import Objective
 
 
@@ -110,7 +111,7 @@ def run_private(
         wake_count[i] += 1
 
     # Scan with per-tick scales; inactive ticks are identity updates.
-    W = jnp.asarray(obj.graph.weights, dtype=jnp.float32)
+    mix = obj.mix
     d = jnp.asarray(obj.degrees, dtype=jnp.float32)
     c = jnp.asarray(obj.confidences, dtype=jnp.float32)
     alphas = jnp.asarray(obj.alphas(), dtype=jnp.float32)
@@ -125,7 +126,7 @@ def run_private(
     def step(Theta, inp):
         i, eta, a_t = inp
         theta_i = Theta[i]
-        neigh = W[i] @ Theta / d[i]
+        neigh = mix.row(Theta, i) / d[i]
         grad_i = _single_agent_grad(obj, theta_i, i) + eta
         new_i = (1.0 - alphas[i]) * theta_i + alphas[i] * (neigh - obj.mu * c[i] * grad_i)
         new_i = a_t * new_i + (1.0 - a_t) * theta_i
@@ -138,7 +139,7 @@ def run_private(
         jnp.asarray(Theta0, dtype=jnp.float32),
         (jnp.asarray(wake, dtype=jnp.int32), noise, act),
     )
-    deg_counts = np.array([len(obj.graph.neighbors(i)) for i in range(n)])
+    deg_counts = neighbor_counts(obj.graph)
     messages = np.concatenate([[0.0], np.cumsum(deg_counts[wake] * active)])
     q0 = float(obj.value(jnp.asarray(Theta0, jnp.float32))) if record_objective else 0.0
     objective = np.concatenate([[q0], np.asarray(objs)])

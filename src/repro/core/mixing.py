@@ -1,0 +1,133 @@
+"""Neighbour-sum operator ``sum_j W_ij Theta_j`` with dense/sparse dispatch.
+
+Every algorithm in ``repro.core`` reduces its graph traffic to two shapes:
+
+* ``all``: the full neighbour sum for every agent at once (synchronous
+  rounds, block gradients) — (n, p) -> (n, p);
+* ``row``: one agent's neighbour sum under a traced index (the Eq. 4
+  asynchronous tick inside ``lax.scan``) — (n, p), i -> (p,).
+
+:func:`mix_op` builds a :class:`MixOp` for either graph representation.
+Below :func:`repro.core.graph.sparse_crossover` agents the operator
+materializes the (n, n) matrix and uses the MXU matmul fast path; at or
+above it the operator stays O(nnz): padded-neighbour gathers for ``row``
+and a ``segment_sum`` for ``all``. On a TPU backend, ``all`` routes
+through the ``graph_mix``/``sparse_mix`` Pallas kernels for f32 at
+on-chip agent counts (and through plain jnp otherwise — on this CPU
+container the kernels would run interpreted, so they are test/TPU-only).
+Pass ``mode="dense"``/``"sparse"`` to pin a representation explicitly
+(the property tests assert both paths agree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import (
+    CSRGraph,
+    as_csr,
+    dense_weights,
+    sparse_crossover,
+)
+
+
+# The Pallas mixing kernels keep the (n, bp) Theta slab VMEM-resident, so
+# they only serve the on-chip regime; past this the jnp paths take over.
+_KERNEL_MAX_N = 4096
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MixOp:
+    """Dense or sparse neighbour-sum operator. Arrays are jit-closure constants."""
+
+    kind: str  # "dense" | "sparse"
+    n: int
+    W: np.ndarray | None = None  # (n, n) — dense only
+    idx: np.ndarray | None = None  # (n, K) padded neighbour indices — sparse only
+    w: np.ndarray | None = None  # (n, K) padded neighbour weights — sparse only
+    rows: np.ndarray | None = None  # (nnz,) COO rows, sorted — sparse only
+    cols: np.ndarray | None = None  # (nnz,)
+    vals: np.ndarray | None = None  # (nnz,)
+
+    def _kernel_auto(self, Theta) -> bool:
+        # Engage the Pallas kernels only where they are the right tool:
+        # compiled TPU lowering, f32 (the kernels accumulate/return f32 —
+        # silently downcasting the x64 theory paths is not acceptable),
+        # and an on-chip agent count whose Theta slab fits VMEM.
+        return (
+            jax.default_backend() == "tpu"
+            and Theta.dtype == jnp.float32
+            and self.n <= _KERNEL_MAX_N
+        )
+
+    def all(self, Theta, use_kernel: bool | None = None):
+        """sum_j W_ij Theta_j for every agent: (n, p) -> (n, p).
+
+        ``use_kernel``: force the Pallas kernel path on (True, interpreted
+        off-TPU) or off (False); None auto-selects it on TPU for f32 at
+        on-chip n.
+        """
+        if use_kernel is None:
+            use_kernel = self._kernel_auto(Theta)
+        if use_kernel:
+            from repro.kernels import ops
+
+            if self.kind == "dense":
+                return ops.graph_mix(jnp.asarray(self.W, jnp.float32), Theta)
+            return ops.sparse_mix(
+                jnp.asarray(self.idx), jnp.asarray(self.w, jnp.float32), Theta
+            )
+        if self.kind == "dense":
+            return jnp.asarray(self.W, Theta.dtype) @ Theta
+        contrib = jnp.asarray(self.vals, Theta.dtype)[:, None] * Theta[jnp.asarray(self.cols)]
+        return jax.ops.segment_sum(
+            contrib, jnp.asarray(self.rows), num_segments=self.n, indices_are_sorted=True
+        )
+
+    def row(self, Theta, i):
+        """sum_j W_ij Theta_j for one (possibly traced) agent i: -> (p,)."""
+        if self.kind == "dense":
+            return jnp.asarray(self.W, Theta.dtype)[i] @ Theta
+        cols_i = jnp.asarray(self.idx)[i]  # (K,)
+        w_i = jnp.asarray(self.w, Theta.dtype)[i]  # (K,)
+        return jnp.sum(w_i[:, None] * Theta[cols_i], axis=0)
+
+    def pairwise_smoothness(self, Theta):
+        """1/2 sum_{i<j} W_ij ||Theta_i - Theta_j||^2 (Eq. 2 first term)."""
+        if self.kind == "dense":
+            W = jnp.asarray(self.W, Theta.dtype)
+            diffs = Theta[:, None, :] - Theta[None, :, :]
+            return 0.25 * jnp.sum(W * jnp.sum(diffs**2, axis=-1))
+        rows, cols = jnp.asarray(self.rows), jnp.asarray(self.cols)
+        d2 = jnp.sum((Theta[rows] - Theta[cols]) ** 2, axis=-1)
+        return 0.25 * jnp.sum(jnp.asarray(self.vals, Theta.dtype) * d2)
+
+
+def mix_op(graph, mode: str = "auto") -> MixOp:
+    """Build the neighbour-sum operator for a dense or CSR graph.
+
+    ``mode="auto"`` picks dense below the crossover (small graphs pay the
+    O(n^2) matrix gladly for the MXU matmul) and sparse at or above it —
+    regardless of which representation the caller holds.
+    """
+    if mode == "auto":
+        mode = "sparse" if graph.n >= sparse_crossover() else "dense"
+    if mode == "dense":
+        return MixOp(kind="dense", n=graph.n, W=dense_weights(graph))
+    if mode != "sparse":
+        raise ValueError(f"unknown mix mode {mode!r}")
+    csr = as_csr(graph)
+    idx, w = csr.padded_neighbors()
+    return MixOp(
+        kind="sparse",
+        n=csr.n,
+        idx=idx,
+        w=w,
+        rows=csr.row_ids(),
+        cols=csr.indices,
+        vals=csr.data,
+    )

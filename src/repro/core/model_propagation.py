@@ -25,38 +25,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import AgentGraph
+from repro.core.graph import AgentGraph, CSRGraph, dense_weights
 from repro.core.objective import AgentData, Objective, make_objective
 
 
 def propagation_objective(
-    graph: AgentGraph, theta_loc: np.ndarray, mu: float, confidences: np.ndarray
+    graph: AgentGraph | CSRGraph, theta_loc: np.ndarray, mu: float, confidences: np.ndarray
 ):
     """Q_MP of Eq. 15 as closures (value, exact solve, one sync round)."""
-    W = graph.weights
+    rows, cols, vals = graph.edge_list()
     d = graph.degrees
     n, p = theta_loc.shape
 
     def value(Theta):
-        diffs = Theta[:, None, :] - Theta[None, :, :]
-        smooth = 0.25 * np.sum(W * np.sum(diffs**2, axis=-1))
+        d2 = np.sum((Theta[rows] - Theta[cols]) ** 2, axis=-1)
+        smooth = 0.5 * np.sum(vals * d2)
         local = 0.5 * mu * np.sum(d * confidences * np.sum((Theta - theta_loc) ** 2, axis=-1))
         return smooth + local
 
     def solve():
         # (diag(D)(I + mu C) - W) Theta = mu diag(D) C theta_loc, per dimension.
-        A = np.diag(d * (1.0 + mu * confidences)) - W
+        A = np.diag(d * (1.0 + mu * confidences)) - dense_weights(graph)
         B = mu * (d * confidences)[:, None] * theta_loc
         return np.linalg.solve(A, B)
 
     return value, solve
 
 
-def propagation_update(graph: AgentGraph, Theta, theta_loc, mu, confidences, i):
+def propagation_update(graph: AgentGraph | CSRGraph, Theta, theta_loc, mu, confidences, i):
     """Eq. 16 for one agent (exact block minimizer)."""
-    W = graph.weights
-    d = graph.degrees
-    neigh = W[i] @ Theta / d[i]
+    cols, w = graph.row(i)
+    neigh = w @ Theta[cols] / graph.degrees[i]
     return (neigh + mu * confidences[i] * theta_loc[i]) / (1.0 + mu * confidences[i])
 
 

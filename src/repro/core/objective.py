@@ -20,13 +20,14 @@ The module exposes the constants driving the theory:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import cached_property, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import AgentGraph
+from repro.core.graph import AgentGraph, CSRGraph
+from repro.core.mixing import mix_op
 
 # ---------------------------------------------------------------------------
 # Loss zoo
@@ -167,13 +168,19 @@ class Objective:
     arrays stored here are treated as constants (closed over by jit).
     """
 
-    graph: AgentGraph
+    graph: AgentGraph | CSRGraph
     data: AgentData
     loss: Loss
     mu: float
     lambdas: np.ndarray  # (n,) L2 regularization per agent
     confidences: np.ndarray  # (n,) c_i in (0, 1]
     clip: float | None = None  # per-point gradient clip (Supp. D.2); None = off
+    mix_mode: str = "auto"  # neighbour-sum path: "auto" | "dense" | "sparse"
+
+    @cached_property
+    def mix(self):
+        """The neighbour-sum operator sum_j W_ij Theta_j (dense or sparse)."""
+        return mix_op(self.graph, mode=self.mix_mode)
 
     # --- constants -------------------------------------------------------
     @property
@@ -268,9 +275,7 @@ class Objective:
 
     @partial(jax.jit, static_argnums=0)
     def value(self, Theta):
-        W = jnp.asarray(self.graph.weights)
-        diffs = Theta[:, None, :] - Theta[None, :, :]
-        smooth = 0.25 * jnp.sum(W * jnp.sum(diffs**2, axis=-1))
+        smooth = self.mix.pairwise_smoothness(Theta)
         d = jnp.asarray(self.degrees)
         c = jnp.asarray(self.confidences)
         return smooth + self.mu * jnp.sum(d * c * self.local_loss(Theta))
@@ -278,10 +283,9 @@ class Objective:
     @partial(jax.jit, static_argnums=0)
     def block_grad(self, Theta):
         """[grad Q]_i for all i (Eq. 3), stacked into (n, p)."""
-        W = jnp.asarray(self.graph.weights)
         d = jnp.asarray(self.degrees)
         c = jnp.asarray(self.confidences)
-        neigh = W @ Theta  # (n, p): sum_j W_ij Theta_j
+        neigh = self.mix.all(Theta)  # (n, p): sum_j W_ij Theta_j
         return d[:, None] * (Theta + self.mu * c[:, None] * self.local_grad(Theta)) - neigh
 
     def grad_check(self, Theta, eps=1e-5):
@@ -312,7 +316,6 @@ class Objective:
         if self.loss.name != "quadratic":
             raise ValueError("closed form only available for quadratic loss")
         n, p = self.n, self.p
-        W = self.graph.weights
         d = self.degrees
         c = self.confidences
         X, y, mask = self.data.X, self.data.y, self.data.mask
@@ -326,21 +329,21 @@ class Objective:
             g0 = -2.0 * Xi.T @ (y[i] * mask[i]) / m[i]
             A[sl, sl] += d[i] * np.eye(p) + self.mu * d[i] * c[i] * H
             b[sl] += -self.mu * d[i] * c[i] * g0
-            for j in range(n):
-                if W[i, j] > 0:
-                    A[sl, j * p : (j + 1) * p] += -W[i, j] * np.eye(p)
+            for j, wij in zip(*self.graph.row(i)):
+                A[sl, j * p : (j + 1) * p] += -wij * np.eye(p)
         sol = np.linalg.solve(A, b)
         return sol.reshape(n, p)
 
 
 def make_objective(
-    graph: AgentGraph,
+    graph: AgentGraph | CSRGraph,
     data: AgentData,
     loss: Loss | str,
     mu: float,
     lambdas=None,
     confidences=None,
     clip: float | None = None,
+    mix_mode: str = "auto",
 ) -> Objective:
     if isinstance(loss, str):
         loss = LOSSES[loss]
@@ -360,4 +363,5 @@ def make_objective(
         lambdas=np.asarray(lambdas, dtype=np.float64),
         confidences=np.asarray(confidences, dtype=np.float64),
         clip=clip,
+        mix_mode=mix_mode,
     )

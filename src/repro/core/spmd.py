@@ -36,7 +36,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6: public API, replication check renamed check_vma.
+    from jax import shard_map as _shard_map_impl
+
+    _SHARD_MAP_CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map(body, *, mesh, in_specs, out_specs):
+    return _shard_map_impl(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        **{_SHARD_MAP_CHECK_KW: False},
+    )
 
 from repro.configs.base import P2PConfig
 from repro.core import privacy
@@ -94,7 +112,6 @@ def gossip_ppermute(params, specs, mesh, offsets, agent_axes, gossip_dtype=None)
         mesh=mesh,
         in_specs=(specs,),
         out_specs=specs,
-        check_vma=False,
     )(params)
 
 
@@ -109,6 +126,23 @@ def gossip_dense(params, mix_matrix):
         ).astype(x.dtype),
         params,
     )
+
+
+def gossip_gather(params, idx, w):
+    """Sparse neighbour mean over the stacked agent axis: O(A * K) gathers.
+
+    ``idx``: (A, K) padded neighbour indices; ``w``: (A, K) row-normalized
+    weights (pad entries 0). The matrix-free counterpart of
+    :func:`gossip_dense` — the only shape that survives past the
+    dense->sparse crossover, where an (A, A) mixing matrix would not fit.
+    """
+
+    def leaf(x):
+        g = jnp.take(x.astype(jnp.float32), idx, axis=0)  # (A, K, ...)
+        ww = w.astype(jnp.float32).reshape(w.shape + (1,) * (g.ndim - 2))
+        return jnp.sum(g * ww, axis=1).astype(x.dtype)
+
+    return jax.tree.map(leaf, params)
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +189,12 @@ class P2PPlan:
 
 def make_train_step(bundle, p2p: P2PConfig, mesh, local_batch_size: int,
                     alpha: float = 0.5, gossip: str = "ppermute"):
-    """Build the pjit-able P2P-DP training round for a model bundle."""
+    """Build the pjit-able P2P-DP training round for a model bundle.
+
+    ``gossip``: "ppermute" (ring collectives), "dense" ((A, A) mixing
+    matrix), "sparse" (padded-neighbour gathers, no (A, A) array), or
+    "matrix" (auto: dense below the sparse crossover, sparse above).
+    """
     agent_mode = p2p.agent_mode
     A = num_agents(mesh, agent_mode)
     agent_axes = agent_axes_of(mesh)
@@ -169,7 +208,14 @@ def make_train_step(bundle, p2p: P2PConfig, mesh, local_batch_size: int,
 
     gossip_dtype = jnp.dtype(p2p.gossip_dtype) if p2p.gossip_dtype else None
     do_gossip = p2p.enabled and A > 1
-    mix_mat = None
+    if gossip == "matrix":
+        # Explicit-W paths: "dense" below the crossover ((A, A) matmul /
+        # all-gather), padded-neighbour gathers at or above it, where the
+        # matrix would be O(A^2).
+        from repro.core.graph import sparse_crossover
+
+        gossip = "sparse" if A >= sparse_crossover() else "dense"
+    mix_mat = mix_idx = mix_w = None
     if do_gossip and gossip == "dense":
         W = np.zeros((A, A))
         for o in p2p.neighbor_offsets:
@@ -177,6 +223,14 @@ def make_train_step(bundle, p2p: P2PConfig, mesh, local_batch_size: int,
                 W[i, (i + o) % A] = 1.0
                 W[i, (i - o) % A] = 1.0
         mix_mat = jnp.asarray(W / W.sum(1, keepdims=True), jnp.float32)
+    elif do_gossip and gossip == "sparse":
+        # The exact distinct-target set the dense W construction produces,
+        # including the self-loop from offsets ≡ 0 (mod A), so dense and
+        # sparse stay bit-identical in semantics for any neighbor_offsets.
+        offs = sorted({s * o % A for o in p2p.neighbor_offsets for s in (1, -1)}) or [0]
+        idx = (np.arange(A)[:, None] + np.asarray(offs)[None, :]) % A
+        mix_idx = jnp.asarray(idx, jnp.int32)
+        mix_w = jnp.full(idx.shape, 1.0 / len(offs), jnp.float32)
 
     def agent_update(params_a, grads_a, mixed_a, key_a):
         noisy = (
@@ -202,6 +256,8 @@ def make_train_step(bundle, p2p: P2PConfig, mesh, local_batch_size: int,
         if do_gossip:
             if gossip == "dense":
                 mixed = gossip_dense(params, mix_mat)
+            elif gossip == "sparse":
+                mixed = gossip_gather(params, mix_idx, mix_w)
             else:
                 specs = param_specs(params, mesh, agent_mode, A)
                 mixed = gossip_ppermute(

@@ -1,6 +1,7 @@
 # Pallas TPU kernels for the compute hot-spots of the P2P-DP update:
 #   dp_clip_noise — fused per-example clip -> mean -> noise add (Eq. 6 inner loop)
 #   graph_mix     — on-chip dense neighbour mixing  A @ Theta
+#   sparse_mix    — CSR neighbour mixing over padded (n, K) neighbour tiles
 #   ssm_scan      — Mamba2 intra-chunk SSD block (zamba2 backbone hot-spot)
 # Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
 # tests sweep shapes/dtypes in interpret mode against the oracle.

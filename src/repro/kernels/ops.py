@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import dp_clip_noise as _dpk
 from repro.kernels import graph_mix as _gmk
+from repro.kernels import sparse_mix as _smk
 from repro.kernels import ssm_scan as _ssk
 
 
@@ -58,6 +59,17 @@ def graph_mix(mix, theta, block_p=256, block_k=128, interpret=None):
     bp = min(block_p, max(128, p))
     t = _pad_to(theta, bp, 1)
     out = _gmk.graph_mix(mix, t, block_p=bp, block_k=block_k, interpret=interpret)
+    return out[:, :p]
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_p", "interpret"))
+def sparse_mix(idx, w, theta, block_a=8, block_p=256, interpret=None):
+    """Y[i] = sum_k w[i,k] theta[idx[i,k]]. idx/w (n,K), theta (n,p) -> (n,p) f32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n, p = theta.shape
+    bp = min(block_p, max(128, p))
+    t = _pad_to(theta, bp, 1)
+    out = _smk.sparse_mix(idx, w, t, block_a=block_a, block_p=bp, interpret=interpret)
     return out[:, :p]
 
 

@@ -25,6 +25,25 @@ def graph_mix_ref(mix, theta):
     return (mix.astype(jnp.float32) @ theta.astype(jnp.float32)).astype(theta.dtype)
 
 
+def sparse_mix_ref(idx, w, theta):
+    """Padded-neighbour mixing: Y[i] = sum_k w[i,k] Theta[idx[i,k]].
+
+    idx: (n, K) int32; w: (n, K); theta: (n, p). Pad entries carry weight 0.
+    """
+    gathered = theta.astype(jnp.float32)[idx]  # (n, K, p)
+    return jnp.einsum("nk,nkp->np", w.astype(jnp.float32), gathered)
+
+
+def csr_mix_ref(rows, cols, vals, theta, n):
+    """CSR neighbour mixing as a pure segment_sum (the O(nnz) oracle).
+
+    rows/cols/vals: (nnz,) sorted COO triples of the symmetric W;
+    theta: (n, p). Returns (n, p) = sum over stored entries.
+    """
+    contrib = vals.astype(jnp.float32)[:, None] * theta.astype(jnp.float32)[cols]
+    return jax.ops.segment_sum(contrib, rows, num_segments=n, indices_are_sorted=True)
+
+
 def ssm_chunk_ref(C, B, cum, dt, x):
     """Mamba2 intra-chunk SSD (single head-group block).
 

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: sparse neighbour mixing over padded neighbour tiles.
+
+Computes ``Y[i] = sum_k w[i, k] * Theta[idx[i, k]]`` — the CSR neighbour
+sum in padded (n, K) form (K = max degree; pad entries point at the row
+itself with weight 0). O(n * K * p) compute vs the dense ``graph_mix``
+kernel's O(n^2 * p) matmul.
+
+Scope: like ``graph_mix``, this kernel serves the *on-chip* regime — the
+n agents co-resident on one chip, whose (n, bp) Theta slab fits VMEM
+(float32: n <= ~8k at bp=256 against a ~16 MB budget). Past that,
+mixing runs through the unbounded-n ``segment_sum``/gather paths in
+``repro.core.mixing`` (see ``kernels/ref.py`` for the oracles); an
+HBM-resident Theta variant with DMA'd row gathers is the follow-up.
+
+Layout: grid (agent_tiles, feature_tiles). The neighbour index table rides
+in SMEM via scalar prefetch so the kernel can issue data-dependent row
+gathers from the Theta slab; Theta streams through the feature dimension in
+(n, bp) slabs that stay VMEM-resident across one agent tile, with bp a
+multiple of 128 (lane-aligned) and the agent tile a multiple of 8
+(sublane-aligned). Weights sit in VMEM as an (ba, K) tile. The ``interpret``
+path runs the same program on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEF_BA = 8  # agents per tile (sublane multiple)
+DEF_BP = 256  # feature-tile width (lane multiple)
+
+
+def _sparse_mix_kernel(n, K, idx_ref, w_ref, theta_ref, out_ref):
+    a0 = pl.program_id(0) * out_ref.shape[0]
+    bp = out_ref.shape[1]
+
+    def agent_row(r, _):
+        row = jnp.minimum(a0 + r, n - 1)  # clamp grid padding rows
+
+        def neighbor(k, acc):
+            j = idx_ref[row, k]
+            contrib = theta_ref[pl.ds(j, 1), :].astype(jnp.float32)
+            return acc + w_ref[pl.ds(r, 1), pl.ds(k, 1)].astype(jnp.float32) * contrib
+
+        acc = jax.lax.fori_loop(0, K, neighbor, jnp.zeros((1, bp), jnp.float32))
+        out_ref[pl.ds(r, 1), :] = acc
+        return 0
+
+    jax.lax.fori_loop(0, out_ref.shape[0], agent_row, 0)
+
+
+def sparse_mix(idx, w, theta, block_a=DEF_BA, block_p=DEF_BP, interpret=False):
+    """idx: (n, K) int32; w: (n, K) float; theta: (n, p). Returns (n, p) f32."""
+    n, p = theta.shape
+    K = idx.shape[1]
+    ba = min(block_a, n)
+    bp = min(block_p, p)
+    nb_a = pl.cdiv(n, ba)
+    nb_p = pl.cdiv(p, bp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb_a, nb_p),
+        in_specs=[
+            pl.BlockSpec((ba, K), lambda a, j, idx_ref: (a, 0)),
+            pl.BlockSpec((n, bp), lambda a, j, idx_ref: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((ba, bp), lambda a, j, idx_ref: (a, j)),
+    )
+    kernel = functools.partial(_sparse_mix_kernel, n, K)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), w, theta)

@@ -31,7 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import AGENT_MODES, ARCH_IDS, SHAPES, get_config
 from repro.configs.base import P2PConfig
 from repro.core import spmd
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh, use_mesh
 from repro.models import build_model
 from repro.models.encdec import enc_len
 from repro.models.sharding import batch_specs, cache_specs, param_specs
@@ -193,7 +193,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, gossip="ppermute",
             arch, shape_name, mesh, gossip=gossip, p2p_on=p2p_on, dp_on=dp_on,
             cfg_overrides=cfg_overrides, moe_overrides=moe_overrides, remat=remat,
         )
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             jitted = jax.jit(
                 step, in_shardings=in_sh, out_shardings=out_sh,
                 donate_argnums=meta.get("donate", ()),

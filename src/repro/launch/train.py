@@ -24,7 +24,7 @@ from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.configs.base import P2PConfig
 from repro.core import spmd
 from repro.data.synthetic import token_stream
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.models import build_model
 from repro.models.encdec import enc_len
 
@@ -96,7 +96,7 @@ def main(argv=None):
         except FileNotFoundError:
             pass
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step_fn, eps_step, noise_scale = spmd.make_train_step(
             bundle, p2p, mesh, args.batch, alpha=args.alpha, gossip=args.gossip
         )

@@ -11,3 +11,10 @@ here (smoke tests must see 1 device).
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running simulation/e2e tests; CI's fast lane runs -m 'not slow'",
+    )

@@ -29,6 +29,7 @@ def _batch_for(cfg, rng):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_reduced_train_step(arch):
     cfg = get_reduced(arch, dtype="float32")

@@ -69,6 +69,71 @@ def test_graph_mix_identity():
 
 
 # ---------------------------------------------------------------------------
+# sparse_mix
+# ---------------------------------------------------------------------------
+
+
+def _random_padded_graph(n, k, rng):
+    """Padded (idx, w) neighbour tiles of a random symmetric graph."""
+    from repro.core import knn_cosine_graph
+
+    csr = knn_cosine_graph(rng.normal(size=(n, 8)), k=k).to_csr()
+    idx, w = csr.padded_neighbors()
+    return jnp.asarray(idx), jnp.asarray(w, jnp.float32), csr
+
+
+@pytest.mark.parametrize("n,k,p", [(8, 3, 128), (33, 5, 200), (100, 10, 300), (128, 7, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_mix_matches_refs(n, k, p, dtype):
+    rng = np.random.default_rng(n * 100 + p)
+    idx, w, csr = _random_padded_graph(n, k, rng)
+    theta = jnp.asarray(rng.normal(size=(n, p)), dtype)
+    got = ops.sparse_mix(idx, w, theta, interpret=True)
+    want_gather = ref.sparse_mix_ref(idx, w, theta)
+    want_segsum = ref.csr_mix_ref(
+        jnp.asarray(csr.row_ids()), jnp.asarray(csr.indices),
+        jnp.asarray(csr.data, jnp.float32), theta, n,
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_gather), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_segsum), rtol=tol, atol=tol)
+
+
+def test_sparse_mix_agrees_with_dense_graph_mix():
+    """The sparse kernel on CSR tiles == the dense kernel on the full matrix."""
+    from repro.core.graph import dense_weights
+
+    rng = np.random.default_rng(0)
+    idx, w, csr = _random_padded_graph(64, 6, rng)
+    theta = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    got = ops.sparse_mix(idx, w, theta, interpret=True)
+    want = ops.graph_mix(jnp.asarray(dense_weights(csr), jnp.float32), theta, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_a,block_p", [(8, 128), (16, 256), (64, 512)])
+def test_sparse_mix_block_shape_invariance(block_a, block_p):
+    rng = np.random.default_rng(7)
+    idx, w, _ = _random_padded_graph(50, 4, rng)
+    theta = jnp.asarray(rng.normal(size=(50, 300)), jnp.float32)
+    got = ops.sparse_mix(idx, w, theta, block_a=block_a, block_p=block_p, interpret=True)
+    want = ref.sparse_mix_ref(idx, w, theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_mix_pad_entries_contribute_nothing():
+    """Rows padded past their true degree (weight 0) must not alter the sum."""
+    rng = np.random.default_rng(3)
+    _, _, csr = _random_padded_graph(32, 4, rng)
+    theta = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    idx_a, w_a = csr.padded_neighbors()
+    idx_b, w_b = csr.padded_neighbors(pad_to=idx_a.shape[1] + 5)
+    out_a = ops.sparse_mix(jnp.asarray(idx_a), jnp.asarray(w_a, jnp.float32), theta, interpret=True)
+    out_b = ops.sparse_mix(jnp.asarray(idx_b), jnp.asarray(w_b, jnp.float32), theta, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # ssm_chunk
 # ---------------------------------------------------------------------------
 
@@ -107,6 +172,7 @@ def test_ssm_chunk_causality():
     )
 
 
+@pytest.mark.slow
 def test_mamba2_kernel_path_matches_einsum_path():
     """use_kernel=True must be numerically identical (fwd) and allclose (bwd)."""
     from repro.configs.base import ModelConfig, SSMConfig

@@ -7,6 +7,7 @@ import pytest
 
 from repro.core import AgentData, DPConfig, make_objective, run_private, run_scan
 from repro.core.spmd import make_fedavg_step
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.configs import get_reduced
 from repro.data.synthetic import linear_classification_problem
 from repro.models import build_model
@@ -46,8 +47,7 @@ def test_adamw_descends_and_tracks_moments():
 
 def test_fedavg_step_keeps_agents_identical():
     """The global-model baseline must keep all agent replicas in lockstep."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_reduced("llama3.2-1b", dtype="float32")
     m = build_model(cfg, remat=False)
     A = 2
@@ -55,7 +55,7 @@ def test_fedavg_step_keeps_agents_identical():
     params = jax.tree.map(lambda p: jnp.broadcast_to(p, (A, *p.shape)), one)
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (A, 2, 17)), jnp.int32)}
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step = jax.jit(make_fedavg_step(m, mesh, lr=0.1))
         new_params, metrics = step(params, batch, jax.random.PRNGKey(1))
     for leaf in jax.tree.leaves(new_params):

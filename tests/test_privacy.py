@@ -3,6 +3,8 @@ algorithm (Eq. 6, Thm. 2)."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

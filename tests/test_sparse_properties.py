@@ -1,0 +1,83 @@
+"""Property tests (hypothesis): dense/sparse mixing parity on random graphs.
+
+The sparse CSR backend must be bit-for-bit interchangeable (to float
+tolerance) with the dense (n, n) path on ANY valid graph — not just the
+topologies the deterministic tests pick. Strategies generate random
+symmetric weighted graphs; properties assert parity of the mix operator
+and of full coordinate-descent trajectories.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import AgentData, AgentGraph, make_objective, mix_op, run_scan
+
+
+def random_graph(n: int, density: float, seed: int) -> AgentGraph:
+    """Random symmetric weighted graph with every degree >= 1."""
+    rng = np.random.default_rng(seed)
+    upper = np.triu((rng.random((n, n)) < density) * rng.random((n, n)), 1)
+    w = upper + upper.T
+    for i in range(n):  # guarantee D_ii > 0
+        if w[i].sum() == 0.0:
+            j = (i + 1) % n
+            w[i, j] = w[j, i] = 1.0
+    return AgentGraph(w)
+
+
+graph_params = st.tuples(
+    st.integers(min_value=2, max_value=24),  # n
+    st.floats(min_value=0.05, max_value=0.9),  # density
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_params, st.integers(min_value=1, max_value=64))
+def test_mix_parity_on_random_graphs(params, p):
+    n, density, seed = params
+    g = random_graph(n, density, seed)
+    Theta = jnp.asarray(
+        np.random.default_rng(seed ^ 0xABCDEF).normal(size=(n, p)), jnp.float32
+    )
+    dense, sparse = mix_op(g, mode="dense"), mix_op(g, mode="sparse")
+    np.testing.assert_allclose(
+        np.asarray(dense.all(Theta)), np.asarray(sparse.all(Theta)),
+        rtol=1e-5, atol=1e-5,
+    )
+    i = seed % n
+    np.testing.assert_allclose(
+        np.asarray(dense.row(Theta, i)), np.asarray(sparse.row(Theta, i)),
+        rtol=1e-5, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        float(dense.pairwise_smoothness(Theta)),
+        float(sparse.pairwise_smoothness(Theta)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(graph_params, st.integers(min_value=1, max_value=60))
+def test_cd_trajectory_parity_on_random_graphs(params, T):
+    n, density, seed = params
+    g = random_graph(n, density, seed)
+    rng = np.random.default_rng(seed)
+    p, m = 4, 5
+    targets = rng.normal(size=(n, p))
+    X = rng.normal(size=(n, m, p)) / np.sqrt(p)
+    y = np.einsum("nmp,np->nm", X, targets)
+    data = AgentData(X=X, y=y, mask=np.ones((n, m)))
+    obj_d = make_objective(g, data, "quadratic", mu=0.4, mix_mode="dense")
+    obj_s = make_objective(g.to_csr(), data, "quadratic", mu=0.4, mix_mode="sparse")
+    wake = rng.integers(0, n, size=T)
+    rd = run_scan(obj_d, np.zeros((n, p)), T=T, rng=rng, wake_sequence=wake)
+    rs = run_scan(obj_s, np.zeros((n, p)), T=T, rng=rng, wake_sequence=wake)
+    np.testing.assert_allclose(rd.Theta, rs.Theta, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(rd.objective, rs.objective, rtol=1e-4, atol=1e-5)

@@ -18,6 +18,7 @@ import pytest
 from repro.configs import get_reduced
 from repro.configs.base import P2PConfig
 from repro.core import spmd
+from repro.launch.mesh import use_mesh
 from repro.models import build_model
 from repro.models.sharding import batch_specs, cache_specs, param_specs
 
@@ -26,6 +27,7 @@ def make_mesh_1dev():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+@pytest.mark.slow
 def test_train_step_single_device_runs_and_updates():
     mesh = make_mesh_1dev()
     cfg = get_reduced("llama3.2-1b", dtype="float32")
@@ -34,7 +36,7 @@ def test_train_step_single_device_runs_and_updates():
     A = spmd.num_agents(mesh, "full")
     params = jax.vmap(m.init)(jax.random.split(jax.random.PRNGKey(0), A))
     batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (A, 2, 17)), jnp.int32)}
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step, _, _ = spmd.make_train_step(m, p2p, mesh, local_batch_size=2)
         p1, metrics = jax.jit(step)(params, batch, jax.random.PRNGKey(1))
         p2, m2 = jax.jit(step)(p1, batch, jax.random.PRNGKey(2))
@@ -48,7 +50,7 @@ def test_dp_noise_scale_follows_theorem1():
     cfg = get_reduced("llama3.2-1b", dtype="float32")
     m = build_model(cfg, remat=False)
     p2p = P2PConfig(agent_mode="full", dp_enabled=True, eps_bar=1.0, planned_rounds=10, clip=2.0)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         _, eps_step, noise_scale = spmd.make_train_step(m, p2p, mesh, local_batch_size=4)
     from repro.core.privacy import invert_uniform_budget
 
@@ -91,8 +93,8 @@ MULTIDEV_SCRIPT = textwrap.dedent(
     from repro.core import spmd
     from repro.models import build_model
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh, use_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = get_reduced("llama3.2-1b", dtype="float32")
     m = build_model(cfg, remat=False)
     A = spmd.num_agents(mesh, "full")
@@ -103,7 +105,7 @@ MULTIDEV_SCRIPT = textwrap.dedent(
 
     p2p_pp = P2PConfig(agent_mode="full", dp_enabled=False, mu=0.2,
                        neighbor_offsets=(1,), gossip_dtype=None)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step_pp, _, _ = spmd.make_train_step(m, p2p_pp, mesh, 2, gossip="ppermute")
         step_dn, _, _ = spmd.make_train_step(m, p2p_pp, mesh, 2, gossip="dense")
         out_pp, _ = jax.jit(step_pp)(params, batch, jax.random.PRNGKey(1))
@@ -114,7 +116,7 @@ MULTIDEV_SCRIPT = textwrap.dedent(
     # ppermute mixing itself equals the circulant-matrix product.
     from repro.models.sharding import param_specs
     specs = param_specs(params, mesh, "full", A)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         mixed = jax.jit(lambda p: spmd.gossip_ppermute(p, specs, mesh, (1,), ("data",)))(params)
     W = np.zeros((A, A))
     for i in range(A):
@@ -127,6 +129,7 @@ MULTIDEV_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_gossip_ppermute_matches_dense_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -145,7 +148,7 @@ def test_decode_step_sharded_single_device():
     m = build_model(cfg, remat=False)
     params = m.init(jax.random.PRNGKey(0))
     caches = m.init_cache(params, 4, 32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         logits, new_caches = jax.jit(m.decode)(params, jnp.zeros((4, 1), jnp.int32), caches, jnp.int32(5))
     assert logits.shape == (4, 1, cfg.padded_vocab)
     assert not bool(jnp.any(jnp.isnan(logits)))
