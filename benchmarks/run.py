@@ -1,10 +1,13 @@
-"""Benchmark entry point — one bench per paper table/figure + roofline.
+"""Benchmark entry point — one bench per paper table/figure + scale/roofline.
 
     PYTHONPATH=src python -m benchmarks.run            # fast mode (CI-sized)
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale
 
 Prints ``name,us_per_call,derived`` CSV lines per bench plus per-table
-summaries; paper-scale results land in results/*.json and EXPERIMENTS.md.
+summaries. Every run (fast mode included) writes the machine-readable
+``results/BENCH_summary.json`` mapping name -> {us_per_call, derived} so
+the perf trajectory accumulates per PR; paper-scale results additionally
+land in results/*.json and EXPERIMENTS.md.
 """
 
 from __future__ import annotations
@@ -20,7 +23,7 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
     ap.add_argument("--only", default=None,
                     choices=[None, "fig1", "fig2", "table1", "kernels", "roofline",
-                             "ablations"])
+                             "ablations", "sparse_scale", "async_engine"])
     args = ap.parse_args(argv)
 
     import jax
@@ -29,11 +32,13 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         bench_ablations,
+        bench_async_engine,
         bench_cd_vs_admm,
         bench_kernels,
         bench_movielens,
         bench_privacy_utility,
         bench_roofline,
+        bench_sparse_scale,
     )
 
     os.makedirs("results", exist_ok=True)
@@ -78,13 +83,42 @@ def main(argv=None) -> None:
         ks = bench_kernels.run()
         record("kernels", t0, f"{len(ks)} kernels timed")
 
+    if args.only in (None, "sparse_scale"):
+        t0 = time.time()
+        kw = dict(n=100_000, ticks=2_000) if args.full else dict(n=5_000, ticks=200)
+        ss = bench_sparse_scale.run(verbose=False, **kw)
+        tick_us = next(v for name, v, _ in ss if name == "sparse_cd_tick")
+        record("sparse_scale", t0, f"n={kw['n']},us_per_seq_tick={tick_us:.3g}")
+
+    if args.only in (None, "async_engine"):
+        t0 = time.time()
+        kw = (
+            dict(n=500_000, slots=12, slot_wakes=4096.0)
+            if args.full
+            else dict(n=20_000, slots=4, slot_wakes=512.0)
+        )
+        ae = bench_async_engine.run(churn=True, verbose=False, **kw)
+        rate = next(v for name, v, _ in ae if name == "async_equiv_ticks_per_s")
+        record("async_engine", t0, f"n={kw['n']},churn=1,equiv_ticks_per_s={rate:.4g}")
+
     if args.only in (None, "roofline"):
         t0 = time.time()
         rs = bench_roofline.run()
         record("roofline", t0, f"{len(rs)} dry-run rows")
 
-    with open("results/bench_summary.json", "w") as f:
-        json.dump([{"name": n, "us": u, "derived": d} for n, u, d in rows], f)
+    # Machine-readable per-PR perf trajectory (fast mode included): the
+    # stable contract is name -> {us_per_call, derived}. Git-tracked, and
+    # only written by complete sweeps — a partial --only debug run must
+    # not clobber the accumulated trajectory. (This replaces the old
+    # list-format bench_summary.json, whose name differed only by case.)
+    if args.only is None:
+        with open("results/BENCH_summary.json", "w") as f:
+            json.dump(
+                {n: {"us_per_call": u, "derived": d} for n, u, d in rows},
+                f,
+                indent=2,
+                sort_keys=True,
+            )
 
 
 if __name__ == "__main__":

@@ -68,6 +68,40 @@ def _single_agent_grad(obj: Objective, theta_i, i):
     return jnp.sum(g * mask[:, None], axis=0) / m + 2.0 * lam * theta_i
 
 
+def batched_agent_grads(obj: Objective, theta_rows, rows):
+    """grad L_i at theta_rows[b] for each (possibly traced) index rows[b].
+
+    The woken-rows counterpart of :func:`_single_agent_grad`: only the B
+    gathered agents' data enters, never the full (n, m, p) stack.
+    """
+    return jax.vmap(lambda th, i: _single_agent_grad(obj, th, i))(theta_rows, rows)
+
+
+def eq4_rows(obj: Objective, Theta, rows, neigh, grad_noise=None):
+    """Batched Eq. 4 update for a gathered row set — the one formula shared
+    by the sequential simulators and the ``repro.sim`` super-tick engine.
+
+    ``rows``: (B,) agent indices (may be traced; out-of-range padding
+    sentinels clamp on gather — callers drop those rows on scatter).
+    ``neigh``: (B, p) raw neighbour sums ``sum_j W_ij Theta_j`` for those
+    rows. ``grad_noise``: optional (B, p) perturbation added to the local
+    gradient — passing the Laplace/Gaussian draw makes this the Eq. 6
+    private update; None (or zeros) recovers the non-private algorithm.
+    Returns the (B, p) replacement rows.
+    """
+    dt = Theta.dtype
+    d = jnp.asarray(obj.degrees, dt)[rows]
+    c = jnp.asarray(obj.confidences, dt)[rows]
+    a = jnp.asarray(obj.alphas(), dt)[rows]
+    theta = Theta[rows]
+    grads = batched_agent_grads(obj, theta, rows)
+    if grad_noise is not None:
+        grads = grads + grad_noise
+    return (1.0 - a[:, None]) * theta + a[:, None] * (
+        neigh / d[:, None] - obj.mu * c[:, None] * grads
+    )
+
+
 def run(
     obj: Objective,
     Theta0: np.ndarray,

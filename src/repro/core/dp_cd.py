@@ -53,6 +53,42 @@ class DPConfig:
         raise ValueError(f"unknown schedule {self.schedule}")
 
 
+def mechanism_scale(cfg: DPConfig, l0: float, eps_step: float, m_i: float) -> float:
+    """Per-step noise scale for the configured mechanism (Thm. 1 / Remark 4)."""
+    if cfg.mechanism == "gaussian":
+        # Remark 4: L2 sensitivity; l0 doubles as the L2 bound here.
+        return privacy.gaussian_scale(l0, eps_step, cfg.delta_step, m_i)
+    return privacy.laplace_scale(l0, eps_step, m_i)
+
+
+def uniform_noise_plan(obj: Objective, cfg: DPConfig, planned_Ti: int):
+    """Per-agent uniform-split plan: (eps_step, (n,) noise scales).
+
+    Each agent plans for ``planned_Ti`` wake-ups, splits its overall
+    ``(eps_bar, delta_bar)`` budget equally over them via composition
+    inversion (Thm. 1), and uses the resulting constant per-step noise
+    scale until the budget is spent. Shared by :func:`run_private`'s
+    per-tick schedule and the batched ``repro.sim`` engine: agents that
+    realize at least ``planned_Ti`` wake-ups stop at identical spend in
+    both drivers. (For agents that wake fewer times, :func:`run_private`
+    re-splits over the *realized* count — larger per-step eps — while the
+    engine keeps the planned scale and under-spends; both stay within
+    budget.)
+    """
+    if planned_Ti <= 0:
+        raise ValueError("planned_Ti must be positive")
+    l0 = obj.lipschitz_l1()
+    if not np.isfinite(l0):
+        raise ValueError(
+            "loss has unbounded gradient; set Objective.clip (Supp. D.2) "
+            "to get a finite sensitivity"
+        )
+    eps_step = privacy.invert_uniform_budget(cfg.eps_bar, planned_Ti, cfg.delta_bar)
+    m = np.maximum(obj.data.num_examples, 1.0)
+    scales = np.array([mechanism_scale(cfg, l0, eps_step, mi) for mi in m])
+    return eps_step, scales
+
+
 @dataclasses.dataclass
 class DPCDResult(CDResult):
     eps_spent: np.ndarray  # (n,) composed eps per agent
@@ -102,11 +138,7 @@ def run_private(
             active[t] = False  # budget exhausted: agent skips its update
             continue
         eps_t = per_agent_eps[i][k]
-        if cfg.mechanism == "gaussian":
-            # Remark 4: L2 sensitivity; l0 doubles as the L2 bound here.
-            noise_scales[t] = privacy.gaussian_scale(l0, eps_t, cfg.delta_step, m[i])
-        else:
-            noise_scales[t] = privacy.laplace_scale(l0, eps_t, m[i])
+        noise_scales[t] = mechanism_scale(cfg, l0, eps_t, m[i])
         accountants[i].spend(eps_t)
         wake_count[i] += 1
 

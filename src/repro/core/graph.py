@@ -195,6 +195,17 @@ def complete_graph(n: int, weight: float = 1.0) -> AgentGraph:
 _DEFAULT_SPARSE_CROSSOVER = 2048
 
 
+def int_env_knob(name: str, default: int) -> int:
+    """Integer agent-count knob from the environment (shared parse/raise)."""
+    raw = os.environ.get(name, default)
+    try:
+        return int(raw)
+    except ValueError as e:
+        raise ValueError(
+            f"{name} must be an integer agent count, got {raw!r}"
+        ) from e
+
+
 def sparse_crossover() -> int:
     """Agent count at which the neighbour-sum switches dense -> sparse.
 
@@ -203,13 +214,7 @@ def sparse_crossover() -> int:
     is the only representation that scales. Override with the
     ``REPRO_SPARSE_CROSSOVER`` environment variable.
     """
-    raw = os.environ.get("REPRO_SPARSE_CROSSOVER", _DEFAULT_SPARSE_CROSSOVER)
-    try:
-        return int(raw)
-    except ValueError as e:
-        raise ValueError(
-            f"REPRO_SPARSE_CROSSOVER must be an integer agent count, got {raw!r}"
-        ) from e
+    return int_env_knob("REPRO_SPARSE_CROSSOVER", _DEFAULT_SPARSE_CROSSOVER)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)

@@ -31,6 +31,7 @@ from repro.core.graph import (
     CSRGraph,
     as_csr,
     dense_weights,
+    int_env_knob,
     sparse_crossover,
 )
 
@@ -38,6 +39,17 @@ from repro.core.graph import (
 # The Pallas mixing kernels keep the (n, bp) Theta slab VMEM-resident, so
 # they only serve the on-chip regime; past this the jnp paths take over.
 _KERNEL_MAX_N = 4096
+
+
+def kernel_max_n() -> int:
+    """Largest agent count the Pallas mixing kernels auto-engage at.
+
+    The kernels keep the whole (n, bp) Theta slab VMEM-resident, so the
+    ceiling tracks the chip's VMEM budget, not correctness. Override with
+    the ``REPRO_KERNEL_MAX_N`` environment variable (mirrors
+    ``REPRO_SPARSE_CROSSOVER``); set 0 to disable the kernel auto-path.
+    """
+    return int_env_knob("REPRO_KERNEL_MAX_N", _KERNEL_MAX_N)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -61,7 +73,7 @@ class MixOp:
         return (
             jax.default_backend() == "tpu"
             and Theta.dtype == jnp.float32
-            and self.n <= _KERNEL_MAX_N
+            and self.n <= kernel_max_n()
         )
 
     def all(self, Theta, use_kernel: bool | None = None):
@@ -95,6 +107,28 @@ class MixOp:
         cols_i = jnp.asarray(self.idx)[i]  # (K,)
         w_i = jnp.asarray(self.w, Theta.dtype)[i]  # (K,)
         return jnp.sum(w_i[:, None] * Theta[cols_i], axis=0)
+
+    def gather_rows(self, Theta, idx, use_kernel: bool | None = None):
+        """Batched neighbour sums for a row subset: (B,) indices -> (B, p).
+
+        The super-tick path of ``repro.sim``: gather only the woken agents'
+        neighbourhoods instead of computing all n sums. Indices may be
+        traced and may contain the out-of-range padding sentinel n (jit
+        gathers clamp it to row n-1; callers mask those entries out when
+        scattering). Sparse graphs route through the ``sparse_mix`` Pallas
+        machinery on TPU under the same gate as :meth:`all`.
+        """
+        if use_kernel is None:
+            use_kernel = self._kernel_auto(Theta)
+        if self.kind == "dense":
+            return jnp.asarray(self.W, Theta.dtype)[idx] @ Theta
+        cols = jnp.asarray(self.idx)[idx]  # (B, K)
+        w = jnp.asarray(self.w, Theta.dtype)[idx]  # (B, K)
+        if use_kernel:
+            from repro.kernels import ops
+
+            return ops.sparse_rows_mix(cols, w.astype(jnp.float32), Theta)
+        return jnp.einsum("bk,bkp->bp", w, Theta[cols])
 
     def pairwise_smoothness(self, Theta):
         """1/2 sum_{i<j} W_ij ||Theta_i - Theta_j||^2 (Eq. 2 first term)."""

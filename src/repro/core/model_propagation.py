@@ -59,6 +59,21 @@ def propagation_update(graph: AgentGraph | CSRGraph, Theta, theta_loc, mu, confi
     return (neigh + mu * confidences[i] * theta_loc[i]) / (1.0 + mu * confidences[i])
 
 
+def propagation_rows(degrees, theta_loc, mu, confidences, rows, neigh):
+    """Batched Eq. 16 for a gathered row set (jit-able, traced ``rows``).
+
+    ``neigh``: (B, p) raw neighbour sums ``sum_j W_ij Theta_j`` for the
+    rows. The exact block minimizer needs no gradient, so this is the
+    whole update — the ``repro.sim`` engine drives it through the same
+    gather/mix/scatter path as Eq. 4.
+    """
+    dt = neigh.dtype
+    d = jnp.asarray(degrees, dt)[rows]
+    c = jnp.asarray(confidences, dt)[rows]
+    loc = jnp.asarray(theta_loc, dt)[rows]
+    return (neigh / d[:, None] + mu * c[:, None] * loc) / (1.0 + mu * c[:, None])
+
+
 def run_propagation(
     graph: AgentGraph,
     theta_loc: np.ndarray,

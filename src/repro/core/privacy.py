@@ -64,6 +64,27 @@ def compose_kairouz(eps_steps: np.ndarray, delta_bar: float) -> float:
     return float(min(basic, adv1, adv2))
 
 
+def compose_uniform(eps_step: float, counts: np.ndarray, delta_bar: float) -> np.ndarray:
+    """Vectorized :func:`compose_kairouz` for k equal per-step epsilons.
+
+    ``counts``: (n,) number of spent steps per agent, all at the same
+    ``eps_step``. Returns the (n,) composed eps_bar — what n separate
+    ``compose_kairouz(np.full(k, eps_step), delta_bar)`` calls would give,
+    without the per-agent python loop (the batched engine's accounting at
+    large n).
+    """
+    k = np.asarray(counts, dtype=np.float64)
+    e = float(eps_step)
+    basic = k * e
+    if delta_bar <= 0:
+        return basic
+    kl = k * (math.expm1(e) * e / (math.exp(e) + 1.0))
+    sq = k * e * e
+    adv1 = kl + np.sqrt(2.0 * sq * np.log(math.e + np.sqrt(sq) / delta_bar))
+    adv2 = kl + np.sqrt(2.0 * sq * math.log(1.0 / delta_bar))
+    return np.where(k > 0, np.minimum(basic, np.minimum(adv1, adv2)), 0.0)
+
+
 def invert_uniform_budget(eps_bar: float, T_i: int, delta_bar: float) -> float:
     """Largest per-step eps s.t. T_i equal steps compose to <= eps_bar.
 

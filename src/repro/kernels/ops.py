@@ -73,6 +73,14 @@ def sparse_mix(idx, w, theta, block_a=8, block_p=256, interpret=None):
     return out[:, :p]
 
 
+# Woken-rows neighbour mix: Y[b] = sum_k w[b,k] theta[idx[b,k]] for (B, K)
+# tiles already gathered down to the rows that woke this super-tick. The
+# generalized kernel makes the row batch independent of n, so this IS
+# sparse_mix; the alias marks the repro.sim call sites and keeps the two
+# paths from ever diverging.
+sparse_rows_mix = sparse_mix
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ssm_chunk(C, B, cum, dt, x, interpret=None):
     """Mamba2 intra-chunk SSD. See repro.kernels.ssm_scan."""

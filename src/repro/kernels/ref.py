@@ -26,12 +26,17 @@ def graph_mix_ref(mix, theta):
 
 
 def sparse_mix_ref(idx, w, theta):
-    """Padded-neighbour mixing: Y[i] = sum_k w[i,k] Theta[idx[i,k]].
+    """Padded-neighbour mixing: Y[r] = sum_k w[r,k] Theta[idx[r,k]].
 
-    idx: (n, K) int32; w: (n, K); theta: (n, p). Pad entries carry weight 0.
+    idx: (R, K) int32; w: (R, K); theta: (n, p). Pad entries carry weight 0.
+    R == n is the full neighbour sum; R == B < n is the woken-rows batch
+    (``sparse_rows_mix``), which shares this oracle.
     """
-    gathered = theta.astype(jnp.float32)[idx]  # (n, K, p)
+    gathered = theta.astype(jnp.float32)[idx]  # (R, K, p)
     return jnp.einsum("nk,nkp->np", w.astype(jnp.float32), gathered)
+
+
+sparse_rows_mix_ref = sparse_mix_ref
 
 
 def csr_mix_ref(rows, cols, vals, theta, n):

@@ -1,9 +1,12 @@
 """Pallas TPU kernel: sparse neighbour mixing over padded neighbour tiles.
 
-Computes ``Y[i] = sum_k w[i, k] * Theta[idx[i, k]]`` — the CSR neighbour
-sum in padded (n, K) form (K = max degree; pad entries point at the row
-itself with weight 0). O(n * K * p) compute vs the dense ``graph_mix``
-kernel's O(n^2 * p) matmul.
+Computes ``Y[r] = sum_k w[r, k] * Theta[idx[r, k]]`` — the CSR neighbour
+sum in padded (R, K) form (K = max degree; pad entries point at the row
+itself with weight 0). The row batch R is independent of the agent count
+n = Theta.shape[0]: with R == n this is the full neighbour sum (O(n * K * p)
+vs the dense ``graph_mix`` kernel's O(n^2 * p) matmul); with R == B << n it
+is the woken-rows path of the ``repro.sim`` super-tick, where only the
+agents that woke this slot need their neighbourhoods mixed.
 
 Scope: like ``graph_mix``, this kernel serves the *on-chip* regime — the
 n agents co-resident on one chip, whose (n, bp) Theta slab fits VMEM
@@ -35,12 +38,12 @@ DEF_BA = 8  # agents per tile (sublane multiple)
 DEF_BP = 256  # feature-tile width (lane multiple)
 
 
-def _sparse_mix_kernel(n, K, idx_ref, w_ref, theta_ref, out_ref):
+def _sparse_mix_kernel(R, K, idx_ref, w_ref, theta_ref, out_ref):
     a0 = pl.program_id(0) * out_ref.shape[0]
     bp = out_ref.shape[1]
 
     def agent_row(r, _):
-        row = jnp.minimum(a0 + r, n - 1)  # clamp grid padding rows
+        row = jnp.minimum(a0 + r, R - 1)  # clamp grid padding rows
 
         def neighbor(k, acc):
             j = idx_ref[row, k]
@@ -55,12 +58,16 @@ def _sparse_mix_kernel(n, K, idx_ref, w_ref, theta_ref, out_ref):
 
 
 def sparse_mix(idx, w, theta, block_a=DEF_BA, block_p=DEF_BP, interpret=False):
-    """idx: (n, K) int32; w: (n, K) float; theta: (n, p). Returns (n, p) f32."""
+    """idx: (R, K) int32 into theta's rows; w: (R, K) float; theta: (n, p).
+
+    Returns (R, p) float32. R == n gives the full neighbour sum; R < n is
+    the gathered woken-rows batch.
+    """
     n, p = theta.shape
-    K = idx.shape[1]
-    ba = min(block_a, n)
+    R, K = idx.shape
+    ba = min(block_a, R)
     bp = min(block_p, p)
-    nb_a = pl.cdiv(n, ba)
+    nb_a = pl.cdiv(R, ba)
     nb_p = pl.cdiv(p, bp)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -71,10 +78,10 @@ def sparse_mix(idx, w, theta, block_a=DEF_BA, block_p=DEF_BP, interpret=False):
         ],
         out_specs=pl.BlockSpec((ba, bp), lambda a, j, idx_ref: (a, j)),
     )
-    kernel = functools.partial(_sparse_mix_kernel, n, K)
+    kernel = functools.partial(_sparse_mix_kernel, R, K)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((R, p), jnp.float32),
         interpret=interpret,
     )(idx.astype(jnp.int32), w, theta)

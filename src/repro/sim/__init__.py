@@ -1,0 +1,35 @@
+# Batched asynchronous simulation engine: Poisson-thinned super-ticks with
+# churn / delay / straggler scenarios, driving CD, DP-CD, and model
+# propagation through one LocalUpdate protocol. The architectural bridge
+# between the faithful O(T) simulator (repro.core.coordinate_descent) and
+# the synchronous SPMD scale layer (repro.core.spmd). See engine.py's
+# docstring for the recorded deviations from pure Poisson semantics.
+from repro.sim.clocks import (
+    default_batch_size,
+    expected_wakes,
+    normalize_rates,
+    slot_duration,
+    wake_probs,
+)
+from repro.sim.engine import AsyncEngine, SimResult, SimState
+from repro.sim.scenarios import ChurnConfig, DelayConfig, Scenario, StragglerConfig
+from repro.sim.updates import CDUpdate, DPCDUpdate, LocalUpdate, PropagationUpdate
+
+__all__ = [
+    "AsyncEngine",
+    "CDUpdate",
+    "ChurnConfig",
+    "DelayConfig",
+    "DPCDUpdate",
+    "LocalUpdate",
+    "PropagationUpdate",
+    "Scenario",
+    "SimResult",
+    "SimState",
+    "StragglerConfig",
+    "default_batch_size",
+    "expected_wakes",
+    "normalize_rates",
+    "slot_duration",
+    "wake_probs",
+]

@@ -1,0 +1,301 @@
+"""Batched asynchronous simulation engine: jit-compiled Poisson super-ticks.
+
+The faithful simulators (``coordinate_descent.run``/``run_scan``) replay
+the global Poisson clock one agent per tick — an O(T) sequential scan
+that cannot reach millions of agents. This engine time-slots the n
+i.i.d. clocks via binomial thinning (:mod:`repro.sim.clocks`): each
+**super-tick** wakes a random *subset* of agents (per-agent rates
+supported), computes their Eq. 4 / Eq. 6 / Eq. 16 updates from a
+bounded-staleness snapshot through the woken-rows gather/mix/scatter
+path (``MixOp.gather_rows``, backed by the ``sparse_mix`` Pallas
+machinery on TPU), and scatter-applies them — collapsing the scan length from O(T) to
+O(T / slot_wakes) compiled steps while keeping the same fixed points
+(cross-validated against the sequential paths in ``test_sim_engine.py``,
+in the style of the spmd/CD cross-checks).
+
+Recorded deviations from pure Poisson semantics (same ledger style as
+``spmd.py``):
+
+* **slotted thinning** — an agent updates at most once per slot, with
+  probability ``1 - exp(-r_i * tau)``; multiple rings within a slot
+  collapse (vanishes as tau -> 0);
+* **bounded staleness** — all agents woken in one slot read the same
+  start-of-slot snapshot, so same-slot neighbours' updates are invisible
+  to each other (staleness <= 1 slot; the sequential simulators are the
+  tau -> 0 limit);
+* **slot capacity** — the woken batch is a static size B (jit shapes);
+  overflow beyond B is dropped and counted in ``SimResult.wakes_dropped``
+  (B defaults to mean + 6 sigma, so this is ~never exercised);
+* **churn caching** — departed agents freeze and neighbours keep mixing
+  their last broadcast model (the ``dp_cd`` stopped-agent semantics);
+* **delay** — per-edge constant delays over start-of-slot snapshots,
+  FIFO by construction (:mod:`repro.sim.scenarios`).
+
+Driver layering: this engine sits between the faithful simulator
+(exact semantics, O(T)) and the SPMD scale layer (synchronous rounds on
+the mesh) — asynchronous semantics at batched-execution speed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import as_csr, neighbor_counts
+from repro.sim import clocks
+from repro.sim.scenarios import Scenario
+from repro.sim.updates import LocalUpdate
+
+
+class SimState(NamedTuple):
+    """Engine state threaded through the jitted super-tick scan."""
+
+    Theta: jnp.ndarray  # (n, p) current models
+    hist: jnp.ndarray  # (depth, n, p) start-of-slot snapshot ring (delay only)
+    ptr: jnp.ndarray  # scalar int32 slot counter
+    active: jnp.ndarray  # (n,) bool churn state
+    key: jnp.ndarray  # PRNG state
+    ustate: object  # LocalUpdate state pytree
+    applied: jnp.ndarray  # scalar int32: updates actually scattered
+    dropped: jnp.ndarray  # scalar int32: wakes lost to slot capacity
+    messages: jnp.ndarray  # scalar f32: cumulative p-vectors transmitted
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Outcome of an engine run (counters are totals since ``init_state``)."""
+
+    Theta: np.ndarray  # final (n, p)
+    objective: np.ndarray | None  # recorded Q values (None if not recorded)
+    messages: float
+    wakes_applied: int
+    wakes_dropped: int
+    slots: int
+    active: np.ndarray  # final (n,) churn state
+    update_state: object  # final LocalUpdate state (e.g. DP spend counts)
+    state: SimState  # full engine state, resumable via ``run(state=...)``
+
+
+class AsyncEngine:
+    """Batched event-driven driver for any :class:`LocalUpdate`.
+
+    Parameters
+    ----------
+    update: the local rule (CD / DP-CD / propagation).
+    slot_wakes: expected wake-ups per super-tick; sets the slot duration
+        tau = slot_wakes / sum(rates). Larger = faster wall-clock, more
+        within-slot staleness.
+    rates: per-agent Poisson rates (default 1.0 — the paper's model);
+        heterogeneous rates model fast/slow device classes.
+    batch_size: static woken-rows batch B (default mean + 6 sigma).
+    scenario: churn / delay / straggler bundle (default: none).
+    seed: engine PRNG seed; every run is a pure function of it.
+    dtype: model dtype (f32 default; f64 for theory-grade parity checks).
+    steps_per_chunk: super-ticks per jitted ``lax.scan`` chunk.
+    """
+
+    def __init__(
+        self,
+        update: LocalUpdate,
+        *,
+        slot_wakes: float = 64.0,
+        rates=None,
+        batch_size: int | None = None,
+        scenario: Scenario | None = None,
+        seed: int = 0,
+        dtype=jnp.float32,
+        steps_per_chunk: int = 16,
+    ):
+        self.update = update
+        self.n, self.p = update.n, update.p
+        self.dtype = dtype
+        self._seed = int(seed)
+        self.steps_per_chunk = int(steps_per_chunk)
+        self.rates = clocks.normalize_rates(rates, self.n)
+        self.tau = clocks.slot_duration(self.rates, slot_wakes)
+        self.wake_probs = clocks.wake_probs(self.rates, self.tau)
+        self.batch_size = (
+            int(batch_size)
+            if batch_size is not None
+            else clocks.default_batch_size(self.rates, self.tau)
+        )
+        if not (0 < self.batch_size <= self.n):
+            raise ValueError("batch_size must lie in (0, n]")
+        self.scenario = scenario or Scenario()
+
+        self._deg_counts = np.asarray(neighbor_counts(update.graph), dtype=np.float32)
+        churn = self.scenario.churn
+        self._leave = churn.leave_vector(self.n) if churn else None
+        self._rejoin = churn.rejoin_vector(self.n) if churn else None
+        strag = self.scenario.straggler
+        self._drop = strag.drop_vector(self.n) if strag else None
+
+        delay = self.scenario.delay
+        self.depth = (delay.max_delay + 1) if delay else 1
+        if delay:
+            # Delayed mixing always runs over padded neighbour tiles (the
+            # sparse_mix layout), whatever the MixOp backend: the per-edge
+            # (delay, neighbour) pair gather has no dense-matmul form.
+            mix = update.mix
+            if mix.kind == "sparse":
+                self._idx, self._w = np.asarray(mix.idx), np.asarray(mix.w)
+            else:
+                self._idx, self._w = as_csr(update.graph).padded_neighbors()
+            self._delays = delay.delay_tiles(self._idx.shape)
+        else:
+            self._idx = self._w = self._delays = None
+
+        self._chunk = jax.jit(self._chunk_impl, static_argnums=1)
+        self._forced = jax.jit(self._slot_forced)
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, Theta0, seed: int | None = None) -> SimState:
+        Theta = jnp.asarray(Theta0, self.dtype)
+        if Theta.shape != (self.n, self.p):
+            raise ValueError(f"Theta0 must be {(self.n, self.p)}, got {Theta.shape}")
+        if self._delays is not None:
+            hist = jnp.broadcast_to(Theta, (self.depth, self.n, self.p))
+        else:
+            hist = jnp.zeros((0, 0, 0), self.dtype)  # no-delay placeholder
+        return SimState(
+            Theta=Theta,
+            hist=hist,
+            ptr=jnp.zeros((), jnp.int32),
+            active=jnp.ones(self.n, bool),
+            key=jax.random.PRNGKey(self._seed if seed is None else seed),
+            ustate=self.update.init_state(),
+            applied=jnp.zeros((), jnp.int32),
+            dropped=jnp.zeros((), jnp.int32),
+            messages=jnp.zeros((), jnp.float32),
+        )
+
+    # -- one super-tick ----------------------------------------------------
+    def _slot(self, state: SimState, wake_mask) -> SimState:
+        n, B = self.n, self.batch_size
+        key, k_leave, k_rejoin, k_wake, k_strag, k_upd = jax.random.split(state.key, 6)
+
+        active = state.active
+        if wake_mask is None:
+            if self._leave is not None:
+                leave = jax.random.uniform(k_leave, (n,)) < jnp.asarray(
+                    self._leave, jnp.float32
+                )
+                rejoin = jax.random.uniform(k_rejoin, (n,)) < jnp.asarray(
+                    self._rejoin, jnp.float32
+                )
+                active = jnp.where(active, ~leave, rejoin)
+            wake = (
+                jax.random.uniform(k_wake, (n,))
+                < jnp.asarray(self.wake_probs, jnp.float32)
+            ) & active
+            if self._drop is not None:
+                wake &= jax.random.uniform(k_strag, (n,)) >= jnp.asarray(
+                    self._drop, jnp.float32
+                )
+        else:
+            # Forced wake sets (tests/diagnostics): no churn transition, no
+            # straggler losses — but departed agents still cannot wake.
+            wake = jnp.asarray(wake_mask, bool) & active
+
+        total = wake.sum().astype(jnp.int32)
+        woken = jnp.nonzero(wake, size=B, fill_value=n)[0].astype(jnp.int32)
+        valid = woken < n
+        dropped = total - valid.sum().astype(jnp.int32)
+
+        Theta = state.Theta
+        if self._delays is not None:
+            hist = state.hist.at[state.ptr % self.depth].set(Theta)
+            safe = jnp.minimum(woken, n - 1)
+            cols = jnp.asarray(self._idx)[safe]  # (B, K)
+            w = jnp.asarray(self._w, Theta.dtype)[safe]  # (B, K)
+            dly = jnp.asarray(self._delays)[safe]  # (B, K)
+            slots = jnp.mod(state.ptr - dly, self.depth)
+            vals = hist[slots, cols]  # (B, K, p)
+            neigh = jnp.einsum("bk,bkp->bp", w, vals)
+        else:
+            hist = state.hist
+            neigh = self.update.mix.gather_rows(Theta, woken)
+
+        new_rows, applied, ustate = self.update.apply(
+            Theta, woken, valid, neigh, k_upd, state.ustate
+        )
+        tgt = jnp.where(applied, woken, n)
+        Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
+
+        deg = jnp.asarray(self._deg_counts)[jnp.minimum(woken, n - 1)]
+        messages = state.messages + jnp.sum(jnp.where(applied, deg, 0.0))
+        return SimState(
+            Theta=Theta,
+            hist=hist,
+            ptr=state.ptr + 1,
+            active=active,
+            key=key,
+            ustate=ustate,
+            applied=state.applied + applied.sum().astype(jnp.int32),
+            dropped=state.dropped + dropped,
+            messages=messages,
+        )
+
+    def _slot_forced(self, state: SimState, wake_mask) -> SimState:
+        return self._slot(state, wake_mask)
+
+    def _chunk_impl(self, state: SimState, steps: int) -> SimState:
+        def body(s, _):
+            return self._slot(s, None), None
+
+        out, _ = jax.lax.scan(body, state, None, length=steps)
+        return out
+
+    # -- drivers -----------------------------------------------------------
+    def step(self, state: SimState, wake_mask) -> SimState:
+        """One super-tick with an explicit wake set (tests/diagnostics)."""
+        return self._forced(state, jnp.asarray(wake_mask, bool))
+
+    def advance(self, state: SimState, slots: int) -> SimState:
+        """Run ``slots`` sampled super-ticks as one jitted scan chunk."""
+        return self._chunk(state, int(slots))
+
+    def run(
+        self,
+        Theta0,
+        slots: int,
+        record_every: int = 0,
+        state: SimState | None = None,
+    ) -> SimResult:
+        """Drive ``slots`` super-ticks from ``Theta0`` (or a resumed state).
+
+        ``record_every`` > 0 records the update's objective every that
+        many slots (requires the update to expose ``objective``).
+        """
+        state = self.init_state(Theta0) if state is None else state
+        record = record_every > 0 and hasattr(self.update, "objective")
+        objective = [self.update.objective(state.Theta)] if record else None
+        stride = record_every if record else self.steps_per_chunk
+        done = 0
+        while done < slots:
+            steps = min(stride, slots - done)
+            if steps == stride:
+                state = self._chunk(state, stride)
+            else:
+                # Tail shorter than the stride: reuse the length-1 scan so
+                # only two scan lengths ever compile, not one per remainder.
+                for _ in range(steps):
+                    state = self._chunk(state, 1)
+            done += steps
+            if record:
+                objective.append(self.update.objective(state.Theta))
+        return SimResult(
+            Theta=np.asarray(state.Theta),
+            objective=np.asarray(objective) if record else None,
+            messages=float(state.messages),
+            wakes_applied=int(state.applied),
+            wakes_dropped=int(state.dropped),
+            slots=int(state.ptr),
+            active=np.asarray(state.active),
+            update_state=state.ustate,
+            state=state,
+        )

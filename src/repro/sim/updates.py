@@ -1,0 +1,212 @@
+"""The ``LocalUpdate`` protocol: one engine, three algorithms.
+
+The batched engine (:class:`repro.sim.AsyncEngine`) owns time, wake
+sampling, scenarios, and the gather/mix/scatter plumbing; what a woken
+agent *does* with its neighbour sum is delegated to a ``LocalUpdate``:
+
+* :class:`CDUpdate` — the non-private Eq. 4 block step;
+* :class:`DPCDUpdate` — the Eq. 6 private step with per-agent uniform
+  budget split and accountant-style stopping (a budget-exhausted agent
+  wakes but applies nothing, exactly like ``dp_cd.run_private``'s
+  inactive ticks);
+* :class:`PropagationUpdate` — the Eq. 16 exact block minimizer of model
+  propagation (Supp. C), data-free and so compatible with the private
+  warm start.
+
+All three reduce to the same contract: given the start-of-slot snapshot,
+the woken row indices (padded with the sentinel n), and their raw
+neighbour sums, return replacement rows plus an ``applied`` mask. The
+math lives next to its sequential twin (``eq4_rows`` in
+``coordinate_descent``, ``propagation_rows`` in ``model_propagation``) so
+the two execution paths cannot drift apart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import privacy
+from repro.core.coordinate_descent import eq4_rows
+from repro.core.dp_cd import DPConfig, uniform_noise_plan
+from repro.core.mixing import MixOp, mix_op
+from repro.core.model_propagation import propagation_objective, propagation_rows
+from repro.core.objective import Objective
+
+
+@runtime_checkable
+class LocalUpdate(Protocol):
+    """What the engine needs from an update rule.
+
+    ``apply`` runs inside the jitted super-tick: ``rows`` is the (B,)
+    woken index batch (padding sentinel n, which gathers clamp and the
+    engine's scatter drops), ``valid`` its (B,) realness mask, ``neigh``
+    the (B, p) raw neighbour sums from the (possibly delayed) snapshot.
+    It returns ``(new_rows, applied, state)`` — only rows with
+    ``applied[b]`` True are scattered back and charged messages.
+    """
+
+    @property
+    def n(self) -> int: ...
+
+    @property
+    def p(self) -> int: ...
+
+    @property
+    def graph(self): ...
+
+    @property
+    def mix(self) -> MixOp: ...
+
+    def init_state(self): ...
+
+    def apply(self, Theta, rows, valid, neigh, key, state): ...
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CDUpdate:
+    """Non-private Eq. 4 coordinate-descent block step."""
+
+    obj: Objective
+
+    @property
+    def n(self) -> int:
+        return self.obj.n
+
+    @property
+    def p(self) -> int:
+        return self.obj.p
+
+    @property
+    def graph(self):
+        return self.obj.graph
+
+    @property
+    def mix(self) -> MixOp:
+        return self.obj.mix
+
+    def init_state(self):
+        return ()
+
+    def apply(self, Theta, rows, valid, neigh, key, state):
+        new_rows = eq4_rows(self.obj, Theta, rows, neigh)
+        return new_rows, valid, state
+
+    def objective(self, Theta) -> float:
+        return float(self.obj.value(Theta))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DPCDUpdate:
+    """Eq. 6 private step with per-agent budget stopping.
+
+    Build via :meth:`plan`. Each agent splits ``(eps_bar, delta_bar)``
+    equally over ``planned_Ti`` expected wake-ups (Thm. 1 composition
+    inversion, shared with ``dp_cd.uniform_noise_plan``) and freezes once
+    they are spent. State is the (n,) count of applied private updates;
+    :meth:`eps_spent` composes it back into per-agent spend.
+
+    Recorded deviation: only the uniform schedule is supported — the
+    Prop. 2 decreasing schedule indexes the *global sequential* tick,
+    which a batched slot does not expose (use ``dp_cd.run_private``).
+    """
+
+    obj: Objective
+    cfg: DPConfig
+    planned_Ti: int
+    eps_step: float
+    scales: np.ndarray  # (n,) per-agent constant noise scale
+
+    @classmethod
+    def plan(cls, obj: Objective, cfg: DPConfig, planned_Ti: int) -> "DPCDUpdate":
+        if cfg.schedule != "uniform":
+            raise NotImplementedError(
+                "the batched engine supports the uniform budget split only; "
+                "the Prop. 2 schedule needs the sequential driver dp_cd.run_private"
+            )
+        eps_step, scales = uniform_noise_plan(obj, cfg, planned_Ti)
+        return cls(obj=obj, cfg=cfg, planned_Ti=planned_Ti, eps_step=eps_step, scales=scales)
+
+    @property
+    def n(self) -> int:
+        return self.obj.n
+
+    @property
+    def p(self) -> int:
+        return self.obj.p
+
+    @property
+    def graph(self):
+        return self.obj.graph
+
+    @property
+    def mix(self) -> MixOp:
+        return self.obj.mix
+
+    def init_state(self):
+        return jnp.zeros(self.n, dtype=jnp.int32)
+
+    def apply(self, Theta, rows, valid, neigh, key, state):
+        n = self.n
+        counts = state[jnp.minimum(rows, n - 1)]
+        applied = valid & (counts < self.planned_Ti)
+        if self.cfg.mechanism == "gaussian":
+            draws = jax.random.normal(key, shape=neigh.shape, dtype=Theta.dtype)
+        else:
+            draws = jax.random.laplace(key, shape=neigh.shape, dtype=Theta.dtype)
+        noise = draws * jnp.asarray(self.scales, Theta.dtype)[jnp.minimum(rows, n - 1)][:, None]
+        new_rows = eq4_rows(self.obj, Theta, rows, neigh, grad_noise=noise)
+        state = state.at[jnp.where(applied, rows, n)].add(1, mode="drop")
+        return new_rows, applied, state
+
+    def eps_spent(self, state) -> np.ndarray:
+        """(n,) composed per-agent spend for the applied-update counts."""
+        return privacy.compose_uniform(
+            self.eps_step, np.asarray(state), self.cfg.delta_bar
+        )
+
+    def objective(self, Theta) -> float:
+        return float(self.obj.value(Theta))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PropagationUpdate:
+    """Eq. 16 model propagation (Supp. C) as an engine update rule."""
+
+    graph: object
+    theta_loc: np.ndarray
+    mu: float
+    confidences: np.ndarray
+    mix_mode: str = "auto"
+
+    @cached_property
+    def mix(self) -> MixOp:
+        return mix_op(self.graph, mode=self.mix_mode)
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    @property
+    def p(self) -> int:
+        return self.theta_loc.shape[1]
+
+    def init_state(self):
+        return ()
+
+    def apply(self, Theta, rows, valid, neigh, key, state):
+        new_rows = propagation_rows(
+            self.graph.degrees, self.theta_loc, self.mu, self.confidences, rows, neigh
+        )
+        return new_rows, valid, state
+
+    def objective(self, Theta) -> float:
+        value, _ = propagation_objective(
+            self.graph, np.asarray(self.theta_loc), self.mu, np.asarray(self.confidences)
+        )
+        return float(value(np.asarray(Theta)))

@@ -134,6 +134,25 @@ def test_sparse_mix_pad_entries_contribute_nothing():
 
 
 # ---------------------------------------------------------------------------
+# sparse_rows_mix (woken-rows batch; the repro.sim super-tick path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B", [1, 7, 24, 64])
+def test_sparse_rows_mix_is_row_slice_of_sparse_mix(B):
+    rng = np.random.default_rng(B)
+    idx, w, _ = _random_padded_graph(64, 6, rng)
+    theta = jnp.asarray(rng.normal(size=(64, 256)), jnp.float32)
+    rows = jnp.asarray(rng.choice(64, size=B, replace=False))
+    got = ops.sparse_rows_mix(idx[rows], w[rows], theta, interpret=True)
+    full = ops.sparse_mix(idx, w, theta, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full)[np.asarray(rows)],
+                               rtol=1e-6, atol=1e-6)
+    want = ref.sparse_rows_mix_ref(idx[rows], w[rows], theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # ssm_chunk
 # ---------------------------------------------------------------------------
 

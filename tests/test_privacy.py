@@ -21,13 +21,26 @@ from repro.core import (
     run_scan,
     theorem2_bound,
 )
-from repro.core.privacy import PrivacyAccountant, schedule_renormalization
+from repro.core.privacy import PrivacyAccountant, compose_uniform, schedule_renormalization
 from repro.data.synthetic import linear_classification_problem
 
 
 # ---------------------------------------------------------------------------
 # Composition / accounting
 # ---------------------------------------------------------------------------
+
+
+@given(
+    st.floats(min_value=1e-3, max_value=1.0),
+    st.integers(min_value=0, max_value=50),
+    st.sampled_from([0.0, 1e-6, np.exp(-5.0)]),
+)
+@settings(max_examples=40, deadline=None)
+def test_compose_uniform_matches_kairouz(eps_step, k, delta):
+    """The vectorized equal-steps composition == the general formula."""
+    want = compose_kairouz(np.full(k, eps_step), delta)
+    got = compose_uniform(eps_step, np.array([k]), delta)
+    np.testing.assert_allclose(got, [want], rtol=1e-12, atol=1e-15)
 
 
 def test_compose_single_step_is_identity():

@@ -124,6 +124,29 @@ def test_sparse_crossover_env_knob(monkeypatch):
     assert mix_op(g, mode="auto").kind == "dense"
 
 
+def test_kernel_max_n_env_knob(monkeypatch):
+    import jax
+
+    from repro.core.mixing import kernel_max_n
+
+    monkeypatch.setenv("REPRO_KERNEL_MAX_N", "7")
+    assert kernel_max_n() == 7
+    monkeypatch.setenv("REPRO_KERNEL_MAX_N", "not-a-number")
+    with pytest.raises(ValueError):
+        kernel_max_n()
+    monkeypatch.delenv("REPRO_KERNEL_MAX_N")
+    assert kernel_max_n() == 4096  # default
+
+    # The auto-gate honours the knob (simulate a TPU backend; dtype f32).
+    op = mix_op(ring_graph(16), mode="sparse")
+    theta = jnp.zeros((16, 4), jnp.float32)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert op._kernel_auto(theta)
+    monkeypatch.setenv("REPRO_KERNEL_MAX_N", "8")
+    assert not op._kernel_auto(theta)  # n=16 now above the ceiling
+    assert not op._kernel_auto(theta.astype(jnp.float64))  # dtype gate intact
+
+
 # ---------------------------------------------------------------------------
 # Dense/sparse parity of the operators and full algorithms
 # ---------------------------------------------------------------------------
@@ -146,6 +169,24 @@ def test_mix_operator_parity():
         float(sparse.pairwise_smoothness(Theta)),
         rtol=1e-6,
     )
+
+
+def test_mix_gather_rows_batched_parity():
+    """gather_rows (the repro.sim woken-rows path) == stacked row() calls,
+    on both backends, including the interpreted kernel route."""
+    rng = np.random.default_rng(8)
+    g = knn_cosine_graph(rng.normal(size=(40, 8)), k=6)
+    Theta = jnp.asarray(rng.normal(size=(40, 9)), jnp.float32)
+    rows = jnp.asarray([0, 3, 17, 39, 5])
+    for mode in ("dense", "sparse"):
+        op = mix_op(g, mode=mode)
+        got = np.asarray(op.gather_rows(Theta, rows))
+        want = np.stack([np.asarray(op.row(Theta, int(i))) for i in np.asarray(rows)])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    sparse = mix_op(g, mode="sparse")
+    kern = np.asarray(sparse.gather_rows(Theta, rows, use_kernel=True))
+    plain = np.asarray(sparse.gather_rows(Theta, rows, use_kernel=False))
+    np.testing.assert_allclose(kern, plain, rtol=1e-5, atol=1e-5)
 
 
 def test_mix_all_kernel_path_parity():
