@@ -1,0 +1,154 @@
+"""Sharded async-engine scale bench: agent blocks over host-platform devices.
+
+Where ``bench_async_engine`` drives the single-device batched engine,
+this bench shards the agents across S devices via the ``shard_map``
+super-tick: per-shard wake batches, a halo exchange of the start-of-slot
+border rows, shard-local gather/mix/scatter. This is the configuration
+that takes agent counts past one device's memory — the bench asserts no
+O(n^2) array exists anywhere and reports partition/communication stats
+(halo fraction) alongside super-tick and equivalent-sequential-tick
+rates.
+
+Run it with forced host devices (the flag must be set before jax loads,
+so ``main`` sets it for you when possible):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.bench_sharded_engine --n 1000000
+
+``benchmarks/run.py --only sharded_engine`` invokes this module in a
+subprocess with 8 forced host devices and records the result in the
+bench summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def run(
+    n: int = 1_000_000,
+    p: int = 8,
+    m: int = 4,
+    shards: int = 8,
+    slots: int = 8,
+    slot_wakes: float = 8192.0,
+    seed: int = 0,
+    churn: bool = True,
+    partition_mode: str = "degree",
+    verbose: bool = True,
+):
+    import jax
+
+    from benchmarks.bench_sparse_scale import _make_problem
+    from repro.sim import CDUpdate, ChurnConfig, Scenario, ShardedAsyncEngine
+
+    if len(jax.devices()) < shards:
+        raise RuntimeError(
+            f"need {shards} devices (have {len(jax.devices())}); set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={shards} "
+            "before jax is imported"
+        )
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    graph, obj = _make_problem(n, p, m, rng)
+    build_s = time.time() - t0
+
+    scenario = Scenario(
+        churn=ChurnConfig(leave_prob=0.01, rejoin_prob=0.2) if churn else None
+    )
+    t0 = time.time()
+    engine = ShardedAsyncEngine(
+        CDUpdate(obj),
+        num_shards=shards,
+        partition_mode=partition_mode,
+        slot_wakes=slot_wakes,
+        scenario=scenario,
+        seed=seed,
+    )
+    part_s = time.time() - t0
+    part = engine.part
+
+    # No (n, n) array anywhere: the shard tiles are O(nnz)-with-padding and
+    # the halo/border maps O(cut); same guard floor as the sparse bench.
+    mix = obj.mix
+    leak_floor = max(n * n // 100, 64 * n + 256)
+    for arr in (
+        mix.idx, mix.w, mix.rows, mix.cols, mix.vals,
+        part.idx, part.w, part.border, part.halo_src, part.owned,
+    ):
+        assert arr is None or arr.size < leak_floor, "an O(n^2) array leaked in"
+
+    state = engine.init_state(np.zeros((n, p)))
+    t0 = time.time()
+    state = engine.advance(state, slots)
+    state.Theta.block_until_ready()
+    compile_s = time.time() - t0
+    warm_applied = int(np.asarray(state.applied).sum())
+
+    t0 = time.time()
+    state = engine.advance(state, slots)
+    state.Theta.block_until_ready()
+    steady_s = time.time() - t0
+
+    Theta = engine.global_theta(state)
+    assert np.isfinite(Theta).all()
+    applied = int(np.asarray(state.applied).sum())
+    steady_applied = applied - warm_applied
+    assert steady_applied > 0
+    ticks_per_s = steady_applied / max(steady_s, 1e-9)
+    deg = np.diff(graph.indptr)
+    rows = [
+        ("sharded_graph_build", build_s * 1e6 / max(n, 1),
+         f"n={n} deg~{deg.mean():.1f} us/agent"),
+        ("sharded_partition", part_s * 1e6 / max(n, 1),
+         f"S={shards} mode={partition_mode} R={part.rows_per_shard} "
+         f"halo_frac={part.halo_fraction():.3f} us/agent"),
+        ("sharded_super_tick", steady_s * 1e6 / slots,
+         f"n={n} S={shards} B={engine.batch_size} churn={int(churn)} us/slot"),
+        ("sharded_equiv_ticks_per_s", ticks_per_s,
+         f"{applied} wakes applied, {int(np.asarray(state.dropped).sum())} dropped, "
+         f"compile {compile_s:.1f}s"),
+    ]
+    if verbose:
+        for name, v, note in rows:
+            print(f"{name},{v:.4g},{note}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_000)
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--slot-wakes", type=float, default=8192.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-churn", action="store_true")
+    ap.add_argument("--mode", default="degree", choices=["degree", "contiguous"])
+    args = ap.parse_args(argv)
+    if "jax" not in sys.modules and "host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""
+    ):
+        # jax not loaded yet: we can still force the host devices ourselves.
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.shards}"
+        ).strip()
+    run(
+        n=args.n,
+        shards=args.shards,
+        slots=args.slots,
+        slot_wakes=args.slot_wakes,
+        seed=args.seed,
+        churn=not args.no_churn,
+        partition_mode=args.mode,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,30 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
+
+
+def _merge_summary(path: str, rows) -> None:
+    """Merge this run's rows into the name -> {us_per_call, derived} map.
+
+    Merging (not clobbering) lets ``--only`` debug runs and the
+    subprocess-launched benches update their own entries without erasing
+    the accumulated trajectory of everything else.
+    """
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    if not isinstance(data, dict):
+        data = {}
+    data.update({n: {"us_per_call": u, "derived": d} for n, u, d in rows})
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
 
 
 def main(argv=None) -> None:
@@ -23,7 +46,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
     ap.add_argument("--only", default=None,
                     choices=[None, "fig1", "fig2", "table1", "kernels", "roofline",
-                             "ablations", "sparse_scale", "async_engine"])
+                             "ablations", "sparse_scale", "async_engine",
+                             "sharded_engine"])
     args = ap.parse_args(argv)
 
     import jax
@@ -101,24 +125,61 @@ def main(argv=None) -> None:
         rate = next(v for name, v, _ in ae if name == "async_equiv_ticks_per_s")
         record("async_engine", t0, f"n={kw['n']},churn=1,equiv_ticks_per_s={rate:.4g}")
 
+    if args.only in (None, "sharded_engine"):
+        # Multi-device engine: needs 8 host-platform devices, which XLA only
+        # grants before its first initialization — so this bench runs in a
+        # subprocess with the flag forced and reports back via its CSV rows.
+        t0 = time.time()
+        kw = (
+            dict(n=1_000_000, slots=8, slot_wakes=8192.0)
+            if args.full
+            else dict(n=100_000, slots=4, slot_wakes=2048.0)
+        )
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+        ).strip()
+        env["PYTHONPATH"] = os.pathsep.join(
+            filter(None, ["src", env.get("PYTHONPATH", "")])
+        )
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_sharded_engine",
+             "--n", str(kw["n"]), "--shards", "8",
+             "--slots", str(kw["slots"]), "--slot-wakes", str(kw["slot_wakes"])],
+            env=env, capture_output=True, text=True,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(f"sharded_engine bench failed:\n{proc.stderr[-3000:]}")
+        rate = next(
+            (
+                float(line.split(",")[1])
+                for line in proc.stdout.splitlines()
+                if line.startswith("sharded_equiv_ticks_per_s,")
+            ),
+            None,
+        )
+        if rate is None:
+            raise RuntimeError(
+                "sharded_engine bench printed no sharded_equiv_ticks_per_s "
+                f"row; stdout was:\n{proc.stdout[-2000:]}"
+            )
+        record("sharded_engine", t0,
+               f"n={kw['n']},shards=8,equiv_ticks_per_s={rate:.4g}")
+
     if args.only in (None, "roofline"):
         t0 = time.time()
         rs = bench_roofline.run()
         record("roofline", t0, f"{len(rs)} dry-run rows")
 
-    # Machine-readable per-PR perf trajectory (fast mode included): the
-    # stable contract is name -> {us_per_call, derived}. Git-tracked, and
-    # only written by complete sweeps — a partial --only debug run must
-    # not clobber the accumulated trajectory. (This replaces the old
-    # list-format bench_summary.json, whose name differed only by case.)
-    if args.only is None:
-        with open("results/BENCH_summary.json", "w") as f:
-            json.dump(
-                {n: {"us_per_call": u, "derived": d} for n, u, d in rows},
-                f,
-                indent=2,
-                sort_keys=True,
-            )
+    # Machine-readable per-PR perf trajectory (fast mode and --only runs
+    # included): the stable contract is name -> {us_per_call, derived},
+    # merged into the existing map so a partial --only run updates its own
+    # entries without clobbering the accumulated trajectory. Written both
+    # under results/ and at the repo root, where the perf-history tooling
+    # looks. (This replaces the old list-format bench_summary.json, whose
+    # name differed only by case.)
+    _merge_summary("results/BENCH_summary.json", rows)
+    _merge_summary("BENCH_summary.json", rows)
 
 
 if __name__ == "__main__":

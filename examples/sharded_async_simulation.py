@@ -1,0 +1,78 @@
+"""Multi-device sharded async engine walkthrough.
+
+Shards a 20,000-agent random geometric collaboration graph across 4
+XLA host-platform devices (the same ``shard_map`` program runs unchanged
+on real TPU/GPU meshes): degree-balanced agent blocks, per-shard wake
+batches, and a halo exchange that ships only the start-of-slot border
+rows between shards. Cross-checks the result against the single-device
+batched engine — under forced wake sets the two are bit-identical; under
+sampled clocks both land on the same fixed point.
+
+Run:  PYTHONPATH=src python examples/sharded_async_simulation.py
+"""
+
+import os
+
+# Must happen before jax initializes: split the CPU into 4 host devices.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import numpy as np  # noqa: E402
+
+from repro.core import AgentData, make_objective, random_geometric_graph  # noqa: E402
+from repro.sim import (  # noqa: E402
+    AsyncEngine,
+    CDUpdate,
+    ChurnConfig,
+    Scenario,
+    ShardedAsyncEngine,
+)
+
+
+def main():
+    import jax
+
+    rng = np.random.default_rng(0)
+    n, p, m, shards = 20_000, 8, 16, 4
+    graph = random_geometric_graph(n, rng, avg_degree=16.0)
+    targets = rng.normal(size=(n, p)) / np.sqrt(p)
+    X = rng.normal(size=(n, m, p)) / np.sqrt(p)
+    y = np.einsum("nmp,np->nm", X, targets)
+    data = AgentData(X=X, y=y, mask=np.ones((n, m)))
+    obj = make_objective(graph, data, "quadratic", mu=0.5, mix_mode="sparse")
+    Theta0 = np.zeros((n, p))
+    update = CDUpdate(obj)
+
+    print(f"devices: {len(jax.devices())}, shards: {shards}")
+    eng = ShardedAsyncEngine(
+        update, num_shards=shards, slot_wakes=1024.0, seed=1,
+        scenario=Scenario(churn=ChurnConfig(leave_prob=0.005, rejoin_prob=0.2)),
+    )
+    part = eng.part
+    print(
+        f"partition: mode={part.mode} rows/shard<={part.rows_per_shard} "
+        f"tile K={part.tile_width} halo fraction={part.halo_fraction():.2f}"
+    )
+
+    res = eng.run(Theta0, slots=40, record_every=10)
+    print("[sharded]  Q:", " -> ".join(f"{q:.1f}" for q in res.objective))
+    print(
+        f"           {res.wakes_applied} wakes over {res.slots} super-ticks, "
+        f"{res.messages:.0f} p-vectors broadcast, "
+        f"{int((~res.active).sum())} agents currently departed"
+    )
+
+    # Forced wake sets: the sharded program IS the single-device engine.
+    single = AsyncEngine(update, slot_wakes=64.0, seed=1)
+    s1 = single.init_state(Theta0)
+    sS = eng.init_state(Theta0)
+    mask_rng = np.random.default_rng(7)
+    for _ in range(3):
+        mask = mask_rng.random(n) < 0.005
+        s1 = single.step(s1, mask)
+        sS = eng.step(sS, mask)
+    exact = np.array_equal(np.asarray(s1.Theta), eng.global_theta(sS))
+    print(f"[parity]   forced wake sets bit-identical to AsyncEngine: {exact}")
+
+
+if __name__ == "__main__":
+    main()

@@ -77,29 +77,37 @@ def batched_agent_grads(obj: Objective, theta_rows, rows):
     return jax.vmap(lambda th, i: _single_agent_grad(obj, th, i))(theta_rows, rows)
 
 
-def eq4_rows(obj: Objective, Theta, rows, neigh, grad_noise=None):
-    """Batched Eq. 4 update for a gathered row set — the one formula shared
-    by the sequential simulators and the ``repro.sim`` super-tick engine.
+def eq4_theta_rows(obj: Objective, theta, rows, neigh, grad_noise=None):
+    """Batched Eq. 4 update for already-gathered rows — the one formula
+    shared by the sequential simulators and both ``repro.sim`` engines.
 
-    ``rows``: (B,) agent indices (may be traced; out-of-range padding
-    sentinels clamp on gather — callers drop those rows on scatter).
-    ``neigh``: (B, p) raw neighbour sums ``sum_j W_ij Theta_j`` for those
-    rows. ``grad_noise``: optional (B, p) perturbation added to the local
+    ``theta``: (B, p) current parameter rows (the sharded engine gathers
+    them from its local block; :func:`eq4_rows` gathers from the global
+    Theta). ``rows``: (B,) *global* agent indices, used for the per-agent
+    constants and data (may be traced; out-of-range padding sentinels
+    clamp on gather — callers drop those rows on scatter). ``neigh``:
+    (B, p) raw neighbour sums ``sum_j W_ij Theta_j`` for those rows.
+    ``grad_noise``: optional (B, p) perturbation added to the local
     gradient — passing the Laplace/Gaussian draw makes this the Eq. 6
     private update; None (or zeros) recovers the non-private algorithm.
     Returns the (B, p) replacement rows.
     """
-    dt = Theta.dtype
+    dt = theta.dtype
     d = jnp.asarray(obj.degrees, dt)[rows]
     c = jnp.asarray(obj.confidences, dt)[rows]
     a = jnp.asarray(obj.alphas(), dt)[rows]
-    theta = Theta[rows]
     grads = batched_agent_grads(obj, theta, rows)
     if grad_noise is not None:
         grads = grads + grad_noise
     return (1.0 - a[:, None]) * theta + a[:, None] * (
         neigh / d[:, None] - obj.mu * c[:, None] * grads
     )
+
+
+def eq4_rows(obj: Objective, Theta, rows, neigh, grad_noise=None):
+    """:func:`eq4_theta_rows` with the row gather from the global (n, p)
+    Theta (padding sentinels clamp on the gather)."""
+    return eq4_theta_rows(obj, Theta[rows], rows, neigh, grad_noise=grad_noise)
 
 
 def run(

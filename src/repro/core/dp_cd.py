@@ -61,6 +61,24 @@ def mechanism_scale(cfg: DPConfig, l0: float, eps_step: float, m_i: float) -> fl
     return privacy.laplace_scale(l0, eps_step, m_i)
 
 
+def mechanism_scales(cfg: DPConfig, l0: float, eps_steps, m) -> np.ndarray:
+    """Vectorized :func:`mechanism_scale` over per-agent epsilons/samples.
+
+    Same formulas, element-wise (the expressions mirror the scalar code
+    exactly so the two paths agree bitwise) — this is what keeps planning
+    O(distinct epsilons) instead of an O(n) python loop.
+    """
+    eps = np.asarray(eps_steps, dtype=np.float64)
+    mm = np.maximum(np.asarray(m, dtype=np.float64), 1.0)
+    if np.any(eps <= 0):
+        raise ValueError("eps_step must be positive")
+    if cfg.mechanism == "gaussian":
+        if not (0 < cfg.delta_step < 1):
+            raise ValueError("need 0 < delta < 1")
+        return 2.0 * l0 * np.sqrt(2.0 * np.log(2.0 / cfg.delta_step)) / (eps * mm)
+    return 2.0 * l0 / (eps * mm)
+
+
 def uniform_noise_plan(obj: Objective, cfg: DPConfig, planned_Ti: int):
     """Per-agent uniform-split plan: (eps_step, (n,) noise scales).
 
@@ -85,8 +103,43 @@ def uniform_noise_plan(obj: Objective, cfg: DPConfig, planned_Ti: int):
         )
     eps_step = privacy.invert_uniform_budget(cfg.eps_bar, planned_Ti, cfg.delta_bar)
     m = np.maximum(obj.data.num_examples, 1.0)
-    scales = np.array([mechanism_scale(cfg, l0, eps_step, mi) for mi in m])
-    return eps_step, scales
+    return eps_step, mechanism_scales(cfg, l0, eps_step, m)
+
+
+def _uniform_tick_schedule(obj, cfg, wake, m, l0, planned_Ti):
+    """Vectorized uniform-split accounting for :func:`run_private`.
+
+    Replaces the O(T) python pre-compute loop (per-tick
+    ``PrivacyAccountant.spend`` plus a dict of per-agent eps arrays) with
+    array passes: per-tick noise scales and active flags plus the
+    composed per-agent spend. Semantics are unchanged — each agent plans
+    ``planned_Ti`` wake-ups via :func:`uniform_noise_plan`, an agent that
+    realizes fewer re-splits its budget over the realized count (one
+    budget inversion per *distinct* realized count, not per agent), and
+    every agent freezes once its planned steps are spent; spend composes
+    through :func:`privacy.compose_uniform`.
+    """
+    n, T = obj.n, len(wake)
+    total = np.bincount(wake, minlength=n)
+    spent = np.minimum(total, planned_Ti)
+    eps_step, scale_i = uniform_noise_plan(obj, cfg, planned_Ti)
+    eps_i = np.full(n, eps_step)
+    for k in np.unique(spent[spent < planned_Ti]):
+        if k == 0:
+            continue  # never woke: nothing spent, eps_i irrelevant
+        sel = spent == k
+        eps_k = privacy.invert_uniform_budget(cfg.eps_bar, int(k), cfg.delta_bar)
+        eps_i[sel] = eps_k
+        scale_i[sel] = mechanism_scales(cfg, l0, eps_k, m[sel])
+    # Occurrence index of each tick within its agent's wake sequence.
+    order = np.argsort(wake, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(total)[:-1]])
+    occ = np.empty(T, dtype=np.int64)
+    occ[order] = np.arange(T) - np.repeat(starts, total)
+    active = occ < planned_Ti
+    noise_scales = np.where(active, scale_i[wake], 0.0)
+    eps_spent = privacy.compose_uniform(eps_i, spent, cfg.delta_bar)
+    return noise_scales, active, eps_spent
 
 
 @dataclasses.dataclass
@@ -121,26 +174,34 @@ def run_private(
     # Plan: each agent expects T_i = T/n wake-ups and allocates eps for them.
     planned_Ti = max(T // n, 1)
     cfg = dataclasses.replace(cfg, T_total=T)
-    accountants = [privacy.PrivacyAccountant(cfg.delta_bar) for _ in range(n)]
-
-    # Pre-compute per-tick noise scales + active flags (numpy; drives the scan).
-    noise_scales = np.zeros(T)
-    active = np.ones(T, dtype=bool)
-    wake_count = np.zeros(n, dtype=int)
-    per_agent_eps: dict[int, np.ndarray] = {}
-    for i in range(n):
-        ticks = np.nonzero(wake == i)[0][:planned_Ti]
-        per_agent_eps[i] = cfg.per_step_eps(obj, ticks)
-    for t in range(T):
-        i = int(wake[t])
-        k = wake_count[i]
-        if k >= len(per_agent_eps[i]):
-            active[t] = False  # budget exhausted: agent skips its update
-            continue
-        eps_t = per_agent_eps[i][k]
-        noise_scales[t] = mechanism_scale(cfg, l0, eps_t, m[i])
-        accountants[i].spend(eps_t)
-        wake_count[i] += 1
+    if cfg.schedule == "uniform":
+        # Vectorized accounting: O(distinct realized counts) inversions
+        # and array passes instead of the O(T) per-tick accountant loop.
+        noise_scales, active, eps_spent = _uniform_tick_schedule(
+            obj, cfg, wake, m, l0, planned_Ti
+        )
+    else:
+        # Prop. 2 decreasing schedule: per-step epsilons index the global
+        # sequential tick, so this stays on the per-tick accountant path.
+        accountants = [privacy.PrivacyAccountant(cfg.delta_bar) for _ in range(n)]
+        noise_scales = np.zeros(T)
+        active = np.ones(T, dtype=bool)
+        wake_count = np.zeros(n, dtype=int)
+        per_agent_eps: dict[int, np.ndarray] = {}
+        for i in range(n):
+            ticks = np.nonzero(wake == i)[0][:planned_Ti]
+            per_agent_eps[i] = cfg.per_step_eps(obj, ticks)
+        for t in range(T):
+            i = int(wake[t])
+            k = wake_count[i]
+            if k >= len(per_agent_eps[i]):
+                active[t] = False  # budget exhausted: agent skips its update
+                continue
+            eps_t = per_agent_eps[i][k]
+            noise_scales[t] = mechanism_scale(cfg, l0, eps_t, m[i])
+            accountants[i].spend(eps_t)
+            wake_count[i] += 1
+        eps_spent = np.array([a.eps_bar for a in accountants])
 
     # Scan with per-tick scales; inactive ticks are identity updates.
     mix = obj.mix
@@ -184,6 +245,6 @@ def run_private(
         objective=objective,
         messages=messages,
         wake_sequence=wake,
-        eps_spent=np.array([a.eps_bar for a in accountants]),
+        eps_spent=eps_spent,
         noise_scales=noise_scales,
     )

@@ -126,14 +126,22 @@ def angular_similarity_graph(
 
 
 def knn_cosine_graph(features: np.ndarray, k: int = 10) -> AgentGraph:
-    """Paper Sec. 5.2: unit weight iff i in kNN(j) or j in kNN(i), cosine sim."""
+    """Paper Sec. 5.2: unit weight iff i in kNN(j) or j in kNN(i), cosine sim.
+
+    ``k`` is clamped to ``n - 1``: with fewer than k candidate peers,
+    everyone is a neighbour (the paper's semantics), instead of
+    ``np.argpartition`` crashing on an out-of-range kth.
+    """
     f = np.asarray(features, dtype=np.float64)
+    n = f.shape[0]
+    k = min(k, n - 1)
+    if k <= 0:
+        return AgentGraph(np.zeros((n, n), dtype=np.float64))
     norms = np.linalg.norm(f, axis=1, keepdims=True)
     norms = np.where(norms == 0.0, 1.0, norms)
     unit = f / norms
     sim = unit @ unit.T
     np.fill_diagonal(sim, -np.inf)
-    n = f.shape[0]
     w = np.zeros((n, n), dtype=np.float64)
     for i in range(n):
         nn = np.argpartition(-sim[i], k)[:k]
@@ -414,6 +422,10 @@ def knn_graph(
     """
     f = np.asarray(features, dtype=np.float64)
     n = f.shape[0]
+    # Clamp like knn_cosine_graph: k >= n means everyone is a neighbour.
+    k = min(k, n - 1)
+    if k <= 0:
+        return csr_from_coo(n, [], [], [])
     norms = np.linalg.norm(f, axis=1, keepdims=True)
     unit = f / np.where(norms == 0.0, 1.0, norms)
     if block_rows is None:

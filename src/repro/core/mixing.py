@@ -141,6 +141,75 @@ class MixOp:
         return 0.25 * jnp.sum(jnp.asarray(self.vals, Theta.dtype) * d2)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedMixOp:
+    """Shard-local neighbour sums with halo exchange over an agent partition.
+
+    The multi-device counterpart of :meth:`MixOp.gather_rows`: agents are
+    contiguous blocks on a ``shard_map`` mesh axis, each shard holds its
+    own (R, p) Theta block, and cross-shard edges are served by a halo
+    exchange — every shard publishes its border rows, one ``all_gather``
+    replicates the (small) border pool, and each shard gathers exactly the
+    remote rows its tiles reference. Per-shard padded tiles keep the CSR
+    neighbour order and the single-device tile width K, so the per-row
+    reduction is bit-identical to :meth:`MixOp.gather_rows`'s sparse path.
+
+    The stacked (S, ...) arrays here are *inputs* to the shard_map'd
+    caller (sliced per shard by ``in_specs``), never closed over — a
+    closure would replicate the O(nnz) tiles onto every device, which is
+    exactly what sharding exists to avoid.
+    """
+
+    n: int
+    num_shards: int
+    idx: np.ndarray  # (S, R, K) extended-local neighbour indices
+    w: np.ndarray  # (S, R, K) weights (pad entries 0)
+    border: np.ndarray  # (S, Bmax) local rows each shard publishes
+    halo_src: np.ndarray  # (S, Hmax) flat index into the (S * Bmax,) border pool
+    axis: str = "shards"
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.idx.shape[1]
+
+    def exchange_halo(self, Theta_local, border_s, halo_src_s):
+        """Extend this shard's (R, p) block with its halo rows.
+
+        Runs inside ``shard_map``: publishes the border rows, all-gathers
+        the (S, Bmax, p) pool, and gathers this shard's halo rows out of
+        it. Returns the (R + Hmax, p) extended array the tiles index.
+        """
+        send = Theta_local[border_s]  # (Bmax, p)
+        pool = jax.lax.all_gather(send, self.axis)  # (S, Bmax, p)
+        halo = pool.reshape((-1,) + pool.shape[2:])[halo_src_s]  # (Hmax, p)
+        return jnp.concatenate([Theta_local, halo], axis=0)
+
+    def gather_rows(self, Theta_ext, idx_s, w_s, rows):
+        """Neighbour sums for local ``rows`` from the extended array.
+
+        ``rows`` may be traced and may carry the out-of-range sentinel R
+        (clamped here; callers mask those entries when scattering), same
+        contract as :meth:`MixOp.gather_rows`.
+        """
+        safe = jnp.minimum(rows, idx_s.shape[0] - 1)
+        cols = idx_s[safe]  # (B, K)
+        ww = jnp.asarray(w_s, Theta_ext.dtype)[safe]  # (B, K)
+        return jnp.einsum("bk,bkp->bp", ww, Theta_ext[cols])
+
+
+def sharded_mix_op(partition, axis: str = "shards") -> ShardedMixOp:
+    """Build the halo-exchange operator for a :class:`GraphPartition`."""
+    return ShardedMixOp(
+        n=partition.n,
+        num_shards=partition.num_shards,
+        idx=partition.idx,
+        w=partition.w,
+        border=partition.border,
+        halo_src=partition.halo_src,
+        axis=axis,
+    )
+
+
 def mix_op(graph, mode: str = "auto") -> MixOp:
     """Build the neighbour-sum operator for a dense or CSR graph.
 

@@ -64,21 +64,23 @@ def compose_kairouz(eps_steps: np.ndarray, delta_bar: float) -> float:
     return float(min(basic, adv1, adv2))
 
 
-def compose_uniform(eps_step: float, counts: np.ndarray, delta_bar: float) -> np.ndarray:
+def compose_uniform(eps_step, counts: np.ndarray, delta_bar: float) -> np.ndarray:
     """Vectorized :func:`compose_kairouz` for k equal per-step epsilons.
 
-    ``counts``: (n,) number of spent steps per agent, all at the same
-    ``eps_step``. Returns the (n,) composed eps_bar — what n separate
-    ``compose_kairouz(np.full(k, eps_step), delta_bar)`` calls would give,
-    without the per-agent python loop (the batched engine's accounting at
-    large n).
+    ``counts``: (n,) number of spent steps per agent, each spent at that
+    agent's constant ``eps_step`` (a scalar, or an array broadcastable
+    against ``counts`` — the re-split schedules give under-waking agents a
+    larger per-step epsilon). Returns the (n,) composed eps_bar — what n
+    separate ``compose_kairouz(np.full(k, eps_step), delta_bar)`` calls
+    would give, without the per-agent python loop (the batched engine's
+    and ``dp_cd.run_private``'s accounting at large n).
     """
     k = np.asarray(counts, dtype=np.float64)
-    e = float(eps_step)
+    e = np.asarray(eps_step, dtype=np.float64)
     basic = k * e
     if delta_bar <= 0:
         return basic
-    kl = k * (math.expm1(e) * e / (math.exp(e) + 1.0))
+    kl = k * (np.expm1(e) * e / (np.exp(e) + 1.0))
     sq = k * e * e
     adv1 = kl + np.sqrt(2.0 * sq * np.log(math.e + np.sqrt(sq) / delta_bar))
     adv2 = kl + np.sqrt(2.0 * sq * math.log(1.0 / delta_bar))

@@ -37,25 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-try:  # jax >= 0.6: public API, replication check renamed check_vma.
-    from jax import shard_map as _shard_map_impl
-
-    _SHARD_MAP_CHECK_KW = "check_vma"
-except ImportError:  # jax 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map_impl
-
-    _SHARD_MAP_CHECK_KW = "check_rep"
-
-
-def shard_map(body, *, mesh, in_specs, out_specs):
-    return _shard_map_impl(
-        body,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        **{_SHARD_MAP_CHECK_KW: False},
-    )
-
+from repro.core.spmd_compat import shard_map
 from repro.configs.base import P2PConfig
 from repro.core import privacy
 from repro.models.sharding import batch_specs, cache_specs, param_specs
@@ -87,10 +69,17 @@ def gossip_ppermute(params, specs, mesh, offsets, agent_axes, gossip_dtype=None)
     """Circulant neighbour mean via collective_permute along the agent axes.
 
     Returns sum_j (W_ij / D_ii) Theta_j for the ring-union graph W with unit
-    weights on +/-o for o in offsets (D_ii = 2 |offsets|).
+    weights on the *distinct* target set {i +/- o mod n : o in offsets}.
+    Offsets that collide modulo the ring size (e.g. +o and -o when
+    2o ≡ 0 mod n, or duplicate offsets) contribute a single unit entry —
+    exactly what the dense/sparse W constructions store — so D_ii is the
+    distinct-neighbour count, not 2 |offsets|. A residual-0 offset
+    (o ≡ 0 mod n) is the self-loop the dense W writes on its diagonal and
+    contributes the agent's own block without a collective.
     """
     n = int(np.prod([mesh.shape[a] for a in agent_axes]))
-    w = 1.0 / (2 * len(offsets))
+    residues = sorted({s * int(o) % n for o in offsets for s in (1, -1)})
+    w = 1.0 / len(residues)
 
     axis = agent_axes if len(agent_axes) > 1 else agent_axes[0]
 
@@ -99,10 +88,12 @@ def gossip_ppermute(params, specs, mesh, offsets, agent_axes, gossip_dtype=None)
             orig_dtype = x.dtype
             xg = x.astype(gossip_dtype) if gossip_dtype is not None else x
             acc = jnp.zeros(xg.shape, dtype=jnp.float32)
-            for o in offsets:
-                fwd = jax.lax.ppermute(xg, axis, _ring_perm(n, o))
-                bwd = jax.lax.ppermute(xg, axis, _ring_perm(n, -o))
-                acc = acc + w * (fwd.astype(jnp.float32) + bwd.astype(jnp.float32))
+            for r in residues:
+                # ppermute with shift r delivers Theta_{i-r}; the residue set
+                # is closed under negation, so the union over residues is the
+                # same distinct {i +/- o} target set the dense W stores.
+                got = xg if r == 0 else jax.lax.ppermute(xg, axis, _ring_perm(n, r))
+                acc = acc + w * got.astype(jnp.float32)
             return acc.astype(orig_dtype)
 
         return jax.tree.map(mix_leaf, tree)
@@ -249,7 +240,11 @@ def make_train_step(bundle, p2p: P2PConfig, mesh, local_batch_size: int,
     # is the pod count (1 single-pod), so the vmap is over a size-A axis and
     # gossip runs over the pod axis only.
     gossip_axes = agent_axes if agent_mode == "full" else ("pod",)
-    offsets = tuple(o for o in p2p.neighbor_offsets if o % max(A, 1) != 0) or (1,)
+    # Pass offsets through unfiltered: gossip_ppermute reduces them to the
+    # distinct residue set itself (residual-0 offsets become the same
+    # self-loop the dense W writes), keeping all three gossip paths on
+    # identical semantics for any neighbor_offsets.
+    offsets = tuple(p2p.neighbor_offsets) or (1,)
 
     def train_step(params, batch, key):
         losses, grads = jax.vmap(jax.value_and_grad(bundle.loss))(params, batch)

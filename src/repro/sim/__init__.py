@@ -11,12 +11,23 @@ from repro.sim.clocks import (
     slot_duration,
     wake_probs,
 )
-from repro.sim.engine import AsyncEngine, SimResult, SimState
+from repro.sim.engine import (
+    AsyncEngine,
+    ShardedAsyncEngine,
+    ShardedSimState,
+    SimResult,
+    SimState,
+)
+from repro.sim.partition import GraphPartition, partition_graph
 from repro.sim.scenarios import ChurnConfig, DelayConfig, Scenario, StragglerConfig
 from repro.sim.updates import CDUpdate, DPCDUpdate, LocalUpdate, PropagationUpdate
 
 __all__ = [
     "AsyncEngine",
+    "GraphPartition",
+    "ShardedAsyncEngine",
+    "ShardedSimState",
+    "partition_graph",
     "CDUpdate",
     "ChurnConfig",
     "DelayConfig",

@@ -34,6 +34,10 @@ Recorded deviations from pure Poisson semantics (same ledger style as
 Driver layering: this engine sits between the faithful simulator
 (exact semantics, O(T)) and the SPMD scale layer (synchronous rounds on
 the mesh) — asynchronous semantics at batched-execution speed.
+:class:`ShardedAsyncEngine` then spreads the agent blocks over a device
+mesh via ``shard_map`` + halo exchange (see its docstring for the extra
+ledger entries), which is what lets agent counts grow past one device's
+memory.
 """
 
 from __future__ import annotations
@@ -45,8 +49,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import Mesh, PartitionSpec as P
+
 from repro.core.graph import as_csr, neighbor_counts
+from repro.core.mixing import sharded_mix_op
+from repro.core.spmd_compat import shard_map
 from repro.sim import clocks
+from repro.sim.partition import partition_graph
 from repro.sim.scenarios import Scenario
 from repro.sim.updates import LocalUpdate
 
@@ -78,6 +87,35 @@ class SimResult:
     active: np.ndarray  # final (n,) churn state
     update_state: object  # final LocalUpdate state (e.g. DP spend counts)
     state: SimState  # full engine state, resumable via ``run(state=...)``
+
+
+def _check_recordable(update, record_every: int) -> None:
+    """Recording needs an objective; asking for one the update cannot
+    produce is an error, not a silent no-op."""
+    if record_every > 0 and not hasattr(update, "objective"):
+        raise ValueError(
+            f"record_every={record_every} requires the update to expose an "
+            f"objective method; {type(update).__name__} has none"
+        )
+
+
+def _drive_slots(state, slots: int, stride: int, advance, on_record=None):
+    """Shared chunked driver for both engines: run ``slots`` super-ticks
+    through ``advance(state, steps)`` in ``stride``-sized chunks, reusing
+    a length-1 scan for the tail so only two scan lengths ever compile
+    (not one per remainder); ``on_record(state)`` fires after each chunk."""
+    done = 0
+    while done < slots:
+        steps = min(stride, slots - done)
+        if steps == stride:
+            state = advance(state, stride)
+        else:
+            for _ in range(steps):
+                state = advance(state, 1)
+        done += steps
+        if on_record is not None:
+            on_record(state)
+    return state
 
 
 class AsyncEngine:
@@ -269,25 +307,21 @@ class AsyncEngine:
         """Drive ``slots`` super-ticks from ``Theta0`` (or a resumed state).
 
         ``record_every`` > 0 records the update's objective every that
-        many slots (requires the update to expose ``objective``).
+        many slots (requires the update to expose ``objective``; asking
+        for a recording the update cannot produce is an error, not a
+        silent no-op).
         """
+        _check_recordable(self.update, record_every)
         state = self.init_state(Theta0) if state is None else state
-        record = record_every > 0 and hasattr(self.update, "objective")
+        record = record_every > 0
         objective = [self.update.objective(state.Theta)] if record else None
-        stride = record_every if record else self.steps_per_chunk
-        done = 0
-        while done < slots:
-            steps = min(stride, slots - done)
-            if steps == stride:
-                state = self._chunk(state, stride)
-            else:
-                # Tail shorter than the stride: reuse the length-1 scan so
-                # only two scan lengths ever compile, not one per remainder.
-                for _ in range(steps):
-                    state = self._chunk(state, 1)
-            done += steps
-            if record:
-                objective.append(self.update.objective(state.Theta))
+        state = _drive_slots(
+            state,
+            slots,
+            record_every if record else self.steps_per_chunk,
+            self._chunk,
+            (lambda s: objective.append(self.update.objective(s.Theta))) if record else None,
+        )
         return SimResult(
             Theta=np.asarray(state.Theta),
             objective=np.asarray(objective) if record else None,
@@ -297,5 +331,319 @@ class AsyncEngine:
             slots=int(state.ptr),
             active=np.asarray(state.active),
             update_state=state.ustate,
+            state=state,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Multi-device sharded engine
+# ---------------------------------------------------------------------------
+
+
+class ShardedSimState(NamedTuple):
+    """Sharded engine state: every leaf is stacked (S, ...) and lives
+    split across the ``shards`` mesh axis."""
+
+    Theta: jnp.ndarray  # (S, R, p) agent blocks
+    active: jnp.ndarray  # (S, R) bool churn state (padding rows: False)
+    keys: jnp.ndarray  # (S, 2) per-shard PRNG keys
+    ustate: object  # LocalUpdate state, leaves resharded to (S, R, ...)
+    applied: jnp.ndarray  # (S,) int32
+    dropped: jnp.ndarray  # (S,) int32
+    messages: jnp.ndarray  # (S,) f32
+    ptr: jnp.ndarray  # (S,) int32 slot counter (identical across shards)
+
+
+class _ShardStatic(NamedTuple):
+    """Per-shard constant tiles, passed (never closed over — a closure
+    would replicate the O(nnz) arrays onto every device) so ``shard_map``
+    splits them along the leading S axis."""
+
+    wake_probs: jnp.ndarray  # (S, R) f32, padding rows 0
+    leave: jnp.ndarray  # (S, R) f32
+    rejoin: jnp.ndarray  # (S, R) f32
+    drop: jnp.ndarray  # (S, R) f32
+    owned: jnp.ndarray  # (S, R) int32 global ids, sentinel n
+    deg: jnp.ndarray  # (S, R) f32 |N_i| for message accounting
+    idx: jnp.ndarray  # (S, R, K) extended-local neighbour indices
+    w: jnp.ndarray  # (S, R, K) weights
+    border: jnp.ndarray  # (S, Bmax) published local rows
+    halo_src: jnp.ndarray  # (S, Hmax) flat border-pool indices
+
+
+class ShardedAsyncEngine:
+    """Multi-device :class:`AsyncEngine`: agent blocks on a ``shard_map`` mesh.
+
+    Each super-tick runs as one SPMD program over the ``shards`` axis:
+    every shard samples its own wake set (per-shard static batch B_s),
+    publishes its border rows of the start-of-slot snapshot, one
+    ``all_gather`` replicates the border pool, each shard gathers its
+    halo rows out of it, computes the woken updates through the same
+    ``eq4``/``Eq. 6``/``Eq. 16`` row formulas as the single-device
+    engine, and scatters shard-locally. Only O(n/S) model state and
+    O(nnz/S) graph tiles live per device.
+
+    Recorded deviations (extends the :class:`AsyncEngine` ledger):
+
+    * **replicated border pool** — the halo exchange all-gathers every
+      shard's border rows to every shard (volume S * Bmax * p per slot)
+      instead of point-to-point sends; for spatially-partitioned graphs
+      the border is the O(surface) cut, so this is small, and it keeps
+      the exchange a single static-shape collective;
+    * **replicated data** — per-agent datasets and theory constants
+      (``obj.data``, degrees, confidences) stay replicated jit constants;
+      only Theta, churn state, and the update state are sharded (sharded
+      data loading is an open ROADMAP item);
+    * **per-shard clocks** — each shard draws its own wake/churn
+      randomness, so sampled trajectories differ from the single-device
+      engine's stream while matching in distribution; forced wake sets
+      (:meth:`step`) are deterministic and reproduce the single-device
+      engine bit-for-bit;
+    * **no per-edge delays** — the snapshot-ring delay scenario needs a
+      (delay, neighbour)-pair halo exchange per ring slot; use the
+      single-device engine for delay studies (churn and stragglers are
+      supported here).
+    """
+
+    def __init__(
+        self,
+        update: LocalUpdate,
+        *,
+        num_shards: int,
+        partition_mode: str = "degree",
+        slot_wakes: float = 64.0,
+        rates=None,
+        batch_size: int | None = None,
+        scenario: Scenario | None = None,
+        seed: int = 0,
+        dtype=jnp.float32,
+        steps_per_chunk: int = 16,
+        devices=None,
+    ):
+        self.update = update
+        self.n, self.p = update.n, update.p
+        self.dtype = dtype
+        self._seed = int(seed)
+        self.steps_per_chunk = int(steps_per_chunk)
+        self.scenario = scenario or Scenario()
+        if self.scenario.delay is not None:
+            raise NotImplementedError(
+                "per-edge delays are single-device only (the snapshot-ring "
+                "gather has no halo-exchange form yet); use AsyncEngine"
+            )
+
+        devices = list(jax.devices() if devices is None else devices)
+        if len(devices) < num_shards:
+            raise ValueError(
+                f"num_shards={num_shards} needs that many devices, "
+                f"have {len(devices)}"
+            )
+        self.mesh = Mesh(np.asarray(devices[:num_shards]), ("shards",))
+        self.part = partition_graph(
+            as_csr(update.graph), num_shards, mode=partition_mode
+        )
+        self.smix = sharded_mix_op(self.part)
+        self.num_shards = self.part.num_shards
+
+        self.rates = clocks.normalize_rates(rates, self.n)
+        self.tau = clocks.slot_duration(self.rates, slot_wakes)
+        self.wake_probs = clocks.wake_probs(self.rates, self.tau)
+        R = self.part.rows_per_shard
+        if batch_size is not None:
+            if not (0 < batch_size <= R):
+                raise ValueError(f"batch_size must lie in (0, R={R}]")
+            self.batch_size = int(batch_size)
+        else:
+            per_shard = max(
+                clocks.default_batch_size(
+                    self.rates[self.part.bounds[s] : self.part.bounds[s + 1]], self.tau
+                )
+                for s in range(self.num_shards)
+            )
+            self.batch_size = int(min(per_shard, R))
+
+        churn = self.scenario.churn
+        self._leave = churn.leave_vector(self.n) if churn else None
+        self._rejoin = churn.rejoin_vector(self.n) if churn else None
+        strag = self.scenario.straggler
+        self._drop = strag.drop_vector(self.n) if strag else None
+
+        part = self.part
+        deg_counts = np.asarray(neighbor_counts(update.graph), dtype=np.float32)
+        zeros = np.zeros(self.n, dtype=np.float32)
+
+        def prob_tiles(v):
+            v = zeros if v is None else v.astype(np.float32)
+            return jnp.asarray(part.pad_rows(v))
+
+        self._static = _ShardStatic(
+            wake_probs=jnp.asarray(part.pad_rows(self.wake_probs.astype(np.float32))),
+            leave=prob_tiles(self._leave),
+            rejoin=prob_tiles(self._rejoin),
+            drop=prob_tiles(self._drop),
+            owned=jnp.asarray(part.owned),
+            deg=jnp.asarray(part.pad_rows(deg_counts)),
+            idx=jnp.asarray(part.idx),
+            w=jnp.asarray(part.w, self.dtype),
+            border=jnp.asarray(part.border),
+            halo_src=jnp.asarray(part.halo_src),
+        )
+
+        self._chunk = jax.jit(self._chunk_impl, static_argnums=2)
+        self._forced = jax.jit(self._forced_impl)
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, Theta0, seed: int | None = None) -> ShardedSimState:
+        Theta = np.asarray(Theta0, self.dtype)
+        if Theta.shape != (self.n, self.p):
+            raise ValueError(f"Theta0 must be {(self.n, self.p)}, got {Theta.shape}")
+        part, S = self.part, self.num_shards
+        base = jax.random.PRNGKey(self._seed if seed is None else seed)
+        keys = jax.vmap(lambda s: jax.random.fold_in(base, s))(jnp.arange(S))
+
+        def shard_leaf(x):
+            x = np.asarray(x)
+            if x.ndim == 0 or x.shape[0] != self.n:
+                raise ValueError(
+                    "sharded engine needs per-agent update-state leaves with "
+                    f"leading dim n={self.n}, got shape {x.shape}"
+                )
+            return jnp.asarray(part.pad_rows(x))
+
+        return ShardedSimState(
+            Theta=jnp.asarray(part.pad_rows(Theta)),
+            active=jnp.asarray(part.pad_rows(np.ones(self.n, bool), fill=False)),
+            keys=keys,
+            ustate=jax.tree.map(shard_leaf, self.update.init_state()),
+            applied=jnp.zeros(S, jnp.int32),
+            dropped=jnp.zeros(S, jnp.int32),
+            messages=jnp.zeros(S, jnp.float32),
+            ptr=jnp.zeros(S, jnp.int32),
+        )
+
+    # -- one shard-local super-tick ----------------------------------------
+    def _slot_local(self, state: ShardedSimState, static: _ShardStatic, wake_mask):
+        """One slot on one shard (arrays carry the local leading dim 1)."""
+        n, R, Bs = self.n, self.part.rows_per_shard, self.batch_size
+        key, k_leave, k_rejoin, k_wake, k_strag, k_upd = jax.random.split(
+            state.keys[0], 6
+        )
+
+        active = state.active[0]
+        if wake_mask is None:
+            if self._leave is not None:
+                leave = jax.random.uniform(k_leave, (R,)) < static.leave[0]
+                rejoin = jax.random.uniform(k_rejoin, (R,)) < static.rejoin[0]
+                active = jnp.where(active, ~leave, rejoin)
+            wake = (jax.random.uniform(k_wake, (R,)) < static.wake_probs[0]) & active
+            if self._drop is not None:
+                wake &= jax.random.uniform(k_strag, (R,)) >= static.drop[0]
+        else:
+            # Forced wake sets: no churn transition, no straggler losses —
+            # but departed agents still cannot wake (AsyncEngine semantics).
+            wake = wake_mask[0] & active
+
+        total = wake.sum().astype(jnp.int32)
+        woken = jnp.nonzero(wake, size=Bs, fill_value=R)[0].astype(jnp.int32)
+        valid = woken < R
+        dropped = total - valid.sum().astype(jnp.int32)
+
+        Theta = state.Theta[0]
+        Theta_ext = self.smix.exchange_halo(Theta, static.border[0], static.halo_src[0])
+        neigh = self.smix.gather_rows(Theta_ext, static.idx[0], static.w[0], woken)
+
+        safe = jnp.minimum(woken, R - 1)
+        grows = jnp.where(valid, static.owned[0][safe], n)  # global ids, sentinel n
+        ustate = jax.tree.map(lambda x: x[0], state.ustate)
+        new_rows, applied, ustate = self.update.apply_rows(
+            Theta[safe], grows, valid, neigh, k_upd, ustate, srows=woken, ssize=R
+        )
+        tgt = jnp.where(applied, woken, R)
+        Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
+
+        messages = state.messages[0] + jnp.sum(
+            jnp.where(applied, static.deg[0][safe], 0.0)
+        )
+        return ShardedSimState(
+            Theta=Theta[None],
+            active=active[None],
+            keys=key[None],
+            ustate=jax.tree.map(lambda x: x[None], ustate),
+            applied=(state.applied[0] + applied.sum().astype(jnp.int32))[None],
+            dropped=(state.dropped[0] + dropped)[None],
+            messages=messages[None],
+            ptr=(state.ptr[0] + 1)[None],
+        )
+
+    def _chunk_impl(self, state, static, steps: int):
+        def local(state, static):
+            def body(s, _):
+                return self._slot_local(s, static, None), None
+
+            out, _ = jax.lax.scan(body, state, None, length=steps)
+            return out
+
+        return shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P("shards"), P("shards")),
+            out_specs=P("shards"),
+        )(state, static)
+
+    def _forced_impl(self, state, static, wake_mask):
+        return shard_map(
+            self._slot_local,
+            mesh=self.mesh,
+            in_specs=(P("shards"), P("shards"), P("shards")),
+            out_specs=P("shards"),
+        )(state, static, wake_mask)
+
+    # -- drivers -----------------------------------------------------------
+    def step(self, state: ShardedSimState, wake_mask) -> ShardedSimState:
+        """One super-tick with an explicit global (n,) wake set."""
+        mask = self.part.pad_rows(np.asarray(wake_mask, bool), fill=False)
+        return self._forced(state, self._static, jnp.asarray(mask))
+
+    def advance(self, state: ShardedSimState, slots: int) -> ShardedSimState:
+        """Run ``slots`` sampled super-ticks as one jitted scan chunk."""
+        return self._chunk(state, self._static, int(slots))
+
+    def global_theta(self, state: ShardedSimState) -> np.ndarray:
+        """Reassemble the (n, p) model matrix from the shard blocks."""
+        return self.part.unpad_rows(np.asarray(state.Theta))
+
+    def run(
+        self,
+        Theta0,
+        slots: int,
+        record_every: int = 0,
+        state: ShardedSimState | None = None,
+    ) -> SimResult:
+        """Drive ``slots`` super-ticks; same contract as :meth:`AsyncEngine.run`."""
+        _check_recordable(self.update, record_every)
+        state = self.init_state(Theta0) if state is None else state
+        record = record_every > 0
+        objective = [self.update.objective(self.global_theta(state))] if record else None
+        state = _drive_slots(
+            state,
+            slots,
+            record_every if record else self.steps_per_chunk,
+            lambda s, steps: self._chunk(s, self._static, steps),
+            (lambda s: objective.append(self.update.objective(self.global_theta(s))))
+            if record
+            else None,
+        )
+        part = self.part
+        return SimResult(
+            Theta=self.global_theta(state),
+            objective=np.asarray(objective) if record else None,
+            messages=float(np.asarray(state.messages).sum()),
+            wakes_applied=int(np.asarray(state.applied).sum()),
+            wakes_dropped=int(np.asarray(state.dropped).sum()),
+            slots=int(np.asarray(state.ptr)[0]),
+            active=part.unpad_rows(np.asarray(state.active)),
+            update_state=jax.tree.map(
+                lambda x: part.unpad_rows(np.asarray(x)), state.ustate
+            ),
             state=state,
         )

@@ -1,0 +1,225 @@
+"""Agent-block graph partitioning for the multi-device async engine.
+
+The paper's algorithm is fully decentralized — a wake-up touches one
+agent's neighbourhood only — so the natural way past one device's memory
+is to shard *agents* across devices. This module cuts a :class:`CSRGraph`
+into ``num_shards`` contiguous index blocks (equal-count blocks, or
+degree-balanced blocks that equalize per-shard nnz) and precomputes
+everything the shard-local super-tick needs as stacked ``(S, ...)``
+arrays that ``shard_map`` splits along the leading axis:
+
+* ``owned``: each shard's global agent ids, padded to the max block size
+  ``R`` with the sentinel ``n``;
+* per-shard **padded neighbour tiles** ``idx``/``w`` of width ``K`` (the
+  global max degree), whose column indices live in the shard's *extended*
+  local array ``[own rows (R) ; halo rows (Hmax)]``;
+* **halo maps** for the cross-shard edges: ``halo`` lists the remote
+  global ids a shard reads, ``border`` lists the local rows a shard must
+  publish, and ``halo_src`` maps each halo slot to its position in the
+  all-gathered ``(S * Bmax,)`` border pool.
+
+The exchange itself (gather border rows -> ``all_gather`` -> gather halo
+rows) lives in :class:`repro.core.mixing.ShardedMixOp`; this module is
+pure numpy and is also used directly by the halo round-trip property
+tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GraphPartition:
+    """A contiguous agent-block partition of a CSR graph with halo maps.
+
+    Shapes: ``S = num_shards``, ``R = rows_per_shard`` (max block size),
+    ``K = tile_width`` (max degree), ``Bmax``/``Hmax`` the padded border
+    and halo widths. All index arrays use the conventions above.
+    """
+
+    csr: CSRGraph
+    num_shards: int
+    mode: str
+    bounds: np.ndarray  # (S + 1,) block boundaries: shard s owns [b_s, b_{s+1})
+    owned: np.ndarray  # (S, R) global agent ids, sentinel n past the block
+    sizes: np.ndarray  # (S,) real rows per shard
+    shard_of: np.ndarray  # (n,) owning shard per agent
+    local_of: np.ndarray  # (n,) local row within the owning shard
+    halo: np.ndarray  # (S, Hmax) remote global ids each shard reads, sentinel n
+    halo_sizes: np.ndarray  # (S,)
+    border: np.ndarray  # (S, Bmax) local rows each shard publishes, padded 0
+    border_sizes: np.ndarray  # (S,)
+    halo_src: np.ndarray  # (S, Hmax) flat index into the (S * Bmax,) border pool
+    idx: np.ndarray  # (S, R, K) extended-local neighbour indices
+    w: np.ndarray  # (S, R, K) neighbour weights (pad entries 0)
+
+    @property
+    def n(self) -> int:
+        return self.csr.n
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.owned.shape[1]
+
+    @property
+    def tile_width(self) -> int:
+        return self.idx.shape[2]
+
+    def halo_fraction(self) -> float:
+        """Mean fraction of read rows that cross shards (comm diagnostics)."""
+        reads = self.sizes + self.halo_sizes
+        return float(self.halo_sizes.sum() / max(reads.sum(), 1))
+
+    # -- row <-> shard layout conversions ---------------------------------
+    def pad_rows(self, x, fill=0):
+        """(n, ...) per-agent array -> (S, R, ...) shard layout, ``fill`` pads."""
+        x = np.asarray(x)
+        if x.shape[:1] != (self.n,):
+            raise ValueError(f"expected leading dim {self.n}, got {x.shape}")
+        out = np.full((self.num_shards, self.rows_per_shard) + x.shape[1:], fill, dtype=x.dtype)
+        real = self.owned < self.n
+        out[real] = x[self.owned[real]]
+        return out
+
+    def unpad_rows(self, x_sh):
+        """(S, R, ...) shard layout -> (n, ...) per-agent array (drops padding)."""
+        x_sh = np.asarray(x_sh)
+        if x_sh.shape[:2] != self.owned.shape:
+            raise ValueError(f"expected leading dims {self.owned.shape}, got {x_sh.shape}")
+        out = np.empty((self.n,) + x_sh.shape[2:], dtype=x_sh.dtype)
+        real = self.owned < self.n
+        out[self.owned[real]] = x_sh[real]
+        return out
+
+
+def _block_bounds(csr: CSRGraph, num_shards: int, mode: str) -> np.ndarray:
+    n, S = csr.n, num_shards
+    if mode == "contiguous":
+        return np.array([n * s // S for s in range(S + 1)], dtype=np.int64)
+    if mode != "degree":
+        raise ValueError(f"unknown partition mode {mode!r}")
+    # Degree-balanced: put boundaries at equal cumulative-nnz quantiles so
+    # every shard carries ~nnz/S edge work, whatever the degree skew.
+    target = csr.nnz * np.arange(1, S, dtype=np.float64) / S
+    cuts = np.searchsorted(np.asarray(csr.indptr, dtype=np.int64), target)
+    bounds = np.concatenate([[0], cuts, [n]]).astype(np.int64)
+    for s in range(1, S + 1):  # keep blocks non-empty and ordered
+        bounds[s] = min(max(bounds[s], bounds[s - 1] + 1), n - (S - s))
+    bounds[S] = n
+    return bounds
+
+
+def partition_graph(
+    csr: CSRGraph, num_shards: int, mode: str = "degree", tile_width: int | None = None
+) -> GraphPartition:
+    """Cut ``csr`` into contiguous agent blocks with halo/border maps.
+
+    ``mode``: "contiguous" (equal agent counts) or "degree" (equal nnz).
+    ``tile_width`` pads the neighbour tiles to at least the global max
+    degree (the default), which keeps the per-row contraction extent
+    identical to the single-device padded tiles — the forced-wake parity
+    guarantee rests on that.
+    """
+    n, S = csr.n, int(num_shards)
+    if not (1 <= S <= max(n, 1)):
+        raise ValueError(f"num_shards must lie in [1, n={n}], got {S}")
+    bounds = _block_bounds(csr, S, mode)
+    sizes = np.diff(bounds).astype(np.int64)
+    R = int(sizes.max())
+    K = max(csr.max_degree(), 1)
+    if tile_width is not None:
+        if tile_width < K:
+            raise ValueError(f"tile_width={tile_width} < max degree {K}")
+        K = int(tile_width)
+
+    owned = np.full((S, R), n, dtype=np.int32)
+    shard_of = np.empty(n, dtype=np.int32)
+    local_of = np.empty(n, dtype=np.int32)
+    for s in range(S):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        owned[s, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        shard_of[lo:hi] = s
+        local_of[lo:hi] = np.arange(hi - lo, dtype=np.int32)
+
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    halos = []
+    for s in range(S):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        cols = csr.indices[indptr[lo] : indptr[hi]]
+        halos.append(np.unique(cols[(cols < lo) | (cols >= hi)]).astype(np.int32))
+    halo_sizes = np.array([len(h) for h in halos], dtype=np.int64)
+    Hmax = max(int(halo_sizes.max(initial=0)), 1)
+    halo = np.full((S, Hmax), n, dtype=np.int32)
+    for s, h in enumerate(halos):
+        halo[s, : len(h)] = h
+
+    # Border of shard s = its rows referenced by any other shard's halo.
+    borders = []
+    all_halo = np.concatenate(halos) if halos else np.zeros(0, dtype=np.int32)
+    for s in range(S):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        mine = np.unique(all_halo[(all_halo >= lo) & (all_halo < hi)])
+        borders.append((mine - lo).astype(np.int32))  # sorted local rows
+    border_sizes = np.array([len(b) for b in borders], dtype=np.int64)
+    Bmax = max(int(border_sizes.max(initial=0)), 1)
+    border = np.zeros((S, Bmax), dtype=np.int32)
+    for s, b in enumerate(borders):
+        border[s, : len(b)] = b
+
+    # halo_src[s, h]: where halo id halo[s, h] lands in the all-gathered
+    # (S * Bmax,) border pool — owner shard block, then position within the
+    # owner's sorted border list.
+    halo_src = np.zeros((S, Hmax), dtype=np.int32)
+    for s, h in enumerate(halos):
+        if not len(h):
+            continue
+        owner = shard_of[h]
+        pos = np.empty(len(h), dtype=np.int64)
+        for d in np.unique(owner):
+            sel = owner == d
+            pos[sel] = np.searchsorted(borders[d], local_of[h[sel]])
+        halo_src[s, : len(h)] = owner.astype(np.int64) * Bmax + pos
+
+    # Per-shard padded neighbour tiles in extended-local coordinates
+    # ([own rows ; halo rows]), preserving CSR neighbour order so the
+    # per-row reduction matches CSRGraph.padded_neighbors bit-for-bit.
+    idx = np.tile(np.arange(R, dtype=np.int32)[None, :, None], (S, 1, K))
+    w = np.zeros((S, R, K), dtype=np.float64)
+    for s in range(S):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        size = hi - lo
+        sl = slice(indptr[lo], indptr[hi])
+        cols = csr.indices[sl].astype(np.int64)
+        vals = csr.data[sl]
+        deg = np.diff(indptr[lo : hi + 1])
+        rows_local = np.repeat(np.arange(size, dtype=np.int64), deg)
+        pos = np.arange(len(cols)) - np.repeat(indptr[lo:hi] - indptr[lo], deg)
+        local_cols = np.where(
+            (cols >= lo) & (cols < hi),
+            cols - lo,
+            R + np.searchsorted(halos[s], cols.astype(np.int32)),
+        )
+        idx[s, rows_local, pos] = local_cols.astype(np.int32)
+        w[s, rows_local, pos] = vals
+    return GraphPartition(
+        csr=csr,
+        num_shards=S,
+        mode=mode,
+        bounds=bounds,
+        owned=owned,
+        sizes=sizes,
+        shard_of=shard_of,
+        local_of=local_of,
+        halo=halo,
+        halo_sizes=halo_sizes,
+        border=border,
+        border_sizes=border_sizes,
+        halo_src=halo_src,
+        idx=idx,
+        w=w,
+    )

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import privacy
-from repro.core.coordinate_descent import eq4_rows
+from repro.core.coordinate_descent import eq4_theta_rows
 from repro.core.dp_cd import DPConfig, uniform_noise_plan
 from repro.core.mixing import MixOp, mix_op
 from repro.core.model_propagation import propagation_objective, propagation_rows
@@ -49,6 +49,14 @@ class LocalUpdate(Protocol):
     the (B, p) raw neighbour sums from the (possibly delayed) snapshot.
     It returns ``(new_rows, applied, state)`` — only rows with
     ``applied[b]`` True are scattered back and charged messages.
+
+    ``apply_rows`` is the same step for the sharded engine, which holds
+    only its local Theta block: ``theta_rows`` is pre-gathered, ``rows``
+    stays *global* (the per-agent constants and data are indexed
+    globally), and the state pytree is this shard's slice, gathered and
+    scattered at the local indices ``srows`` with sentinel ``ssize``.
+    ``apply`` delegates to it with ``srows=rows, ssize=n``, so the two
+    execution paths cannot drift apart.
     """
 
     @property
@@ -66,6 +74,8 @@ class LocalUpdate(Protocol):
     def init_state(self): ...
 
     def apply(self, Theta, rows, valid, neigh, key, state): ...
+
+    def apply_rows(self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None): ...
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -94,7 +104,10 @@ class CDUpdate:
         return ()
 
     def apply(self, Theta, rows, valid, neigh, key, state):
-        new_rows = eq4_rows(self.obj, Theta, rows, neigh)
+        return self.apply_rows(Theta[rows], rows, valid, neigh, key, state)
+
+    def apply_rows(self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None):
+        new_rows = eq4_theta_rows(self.obj, theta_rows, rows, neigh)
         return new_rows, valid, state
 
     def objective(self, Theta) -> float:
@@ -152,16 +165,22 @@ class DPCDUpdate:
         return jnp.zeros(self.n, dtype=jnp.int32)
 
     def apply(self, Theta, rows, valid, neigh, key, state):
+        return self.apply_rows(Theta[jnp.minimum(rows, self.n - 1)], rows, valid, neigh, key, state)
+
+    def apply_rows(self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None):
         n = self.n
-        counts = state[jnp.minimum(rows, n - 1)]
+        if srows is None:
+            srows, ssize = rows, n
+        dt = theta_rows.dtype
+        counts = state[jnp.minimum(srows, ssize - 1)]
         applied = valid & (counts < self.planned_Ti)
         if self.cfg.mechanism == "gaussian":
-            draws = jax.random.normal(key, shape=neigh.shape, dtype=Theta.dtype)
+            draws = jax.random.normal(key, shape=neigh.shape, dtype=dt)
         else:
-            draws = jax.random.laplace(key, shape=neigh.shape, dtype=Theta.dtype)
-        noise = draws * jnp.asarray(self.scales, Theta.dtype)[jnp.minimum(rows, n - 1)][:, None]
-        new_rows = eq4_rows(self.obj, Theta, rows, neigh, grad_noise=noise)
-        state = state.at[jnp.where(applied, rows, n)].add(1, mode="drop")
+            draws = jax.random.laplace(key, shape=neigh.shape, dtype=dt)
+        noise = draws * jnp.asarray(self.scales, dt)[jnp.minimum(rows, n - 1)][:, None]
+        new_rows = eq4_theta_rows(self.obj, theta_rows, rows, neigh, grad_noise=noise)
+        state = state.at[jnp.where(applied, srows, ssize)].add(1, mode="drop")
         return new_rows, applied, state
 
     def eps_spent(self, state) -> np.ndarray:
@@ -200,6 +219,11 @@ class PropagationUpdate:
         return ()
 
     def apply(self, Theta, rows, valid, neigh, key, state):
+        return self.apply_rows(Theta[rows], rows, valid, neigh, key, state)
+
+    def apply_rows(self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None):
+        # The Eq. 16 exact block minimizer reads only the neighbour sum and
+        # the (globally indexed) local models — theta_rows is unused.
         new_rows = propagation_rows(
             self.graph.degrees, self.theta_loc, self.mu, self.confidences, rows, neigh
         )

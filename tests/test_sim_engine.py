@@ -354,6 +354,41 @@ def test_full_scenario_still_converges(small_problem):
 
 
 # ---------------------------------------------------------------------------
+# record_every validation
+# ---------------------------------------------------------------------------
+
+
+class _NoObjectiveUpdate:
+    """A LocalUpdate without an objective method (delegates the rest)."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.n, self.p, self.graph, self.mix = inner.n, inner.p, inner.graph, inner.mix
+
+    def init_state(self):
+        return self._inner.init_state()
+
+    def apply(self, *args, **kw):
+        return self._inner.apply(*args, **kw)
+
+    def apply_rows(self, *args, **kw):
+        return self._inner.apply_rows(*args, **kw)
+
+
+def test_record_every_without_objective_raises(small_problem):
+    """Asking for an objective trace the update cannot produce must be a
+    loud error, not a silently-ignored record_every."""
+    obj = small_problem
+    upd = _NoObjectiveUpdate(CDUpdate(obj))
+    eng = AsyncEngine(upd, slot_wakes=4.0, seed=0)
+    with pytest.raises(ValueError, match="record_every"):
+        eng.run(np.zeros((obj.n, obj.p)), slots=4, record_every=2)
+    # record_every=0 still runs fine without an objective.
+    res = eng.run(np.zeros((obj.n, obj.p)), slots=4)
+    assert res.objective is None and res.slots == 4
+
+
+# ---------------------------------------------------------------------------
 # Model propagation through the same engine
 # ---------------------------------------------------------------------------
 

@@ -97,6 +97,25 @@ def test_knn_graph_matches_dense_knn():
     np.testing.assert_allclose(got, want)
 
 
+def test_knn_clamps_k_to_everyone_is_a_neighbour():
+    """k >= n must mean the complete graph (paper semantics), not an
+    np.argpartition crash on an out-of-range kth."""
+    feats = np.random.default_rng(3).normal(size=(5, 4))
+    for k in (4, 5, 17):  # n - 1, n, and far beyond
+        dense = knn_cosine_graph(feats, k=k)
+        sparse = knn_graph(feats, k=k, block_rows=2)
+        want = 1.0 - np.eye(5)
+        np.testing.assert_array_equal(dense.weights, want)
+        np.testing.assert_array_equal(dense_weights(sparse), want)
+
+
+def test_knn_degenerate_single_agent():
+    feats = np.ones((1, 3))
+    assert knn_cosine_graph(feats, k=10).num_edges() == 0
+    g = knn_graph(feats, k=10)
+    assert g.n == 1 and g.nnz == 0
+
+
 def test_random_geometric_graph_properties():
     rng = np.random.default_rng(2)
     g = random_geometric_graph(800, rng, avg_degree=10.0)

@@ -142,6 +142,72 @@ def test_gossip_ppermute_matches_dense_multidevice():
     assert "MULTIDEV_OK" in res.stdout
 
 
+GOSSIP_COLLISION_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core import spmd
+    from repro.launch.mesh import use_mesh
+
+    for A in (2, 3, 4, 6, 8):
+        mesh = Mesh(np.asarray(jax.devices()[:A]), ("data",))
+        rng = np.random.default_rng(A)
+        params = {"w": jnp.asarray(rng.normal(size=(A, 5)), jnp.float32),
+                  "b": jnp.asarray(rng.normal(size=(A,)), jnp.float32)}
+        specs = {"w": P("data"), "b": P("data")}
+        for offsets in [(1,), (2,), (1, 2), (max(A // 2, 1),), (1, A), (3,), (1, 2, 3)]:
+            # The distinct target set (incl. the self-loop from offsets
+            # ≡ 0 mod A) — exactly what the dense W construction stores.
+            offs = sorted({s * int(o) % A for o in offsets for s in (1, -1)})
+            W = np.zeros((A, A))
+            for o in offsets:
+                for i in range(A):
+                    W[i, (i + o) % A] = 1.0
+                    W[i, (i - o) % A] = 1.0
+            Wn = W / W.sum(1, keepdims=True)
+            idx = (np.arange(A)[:, None] + np.asarray(offs)[None, :]) % A
+            wgt = np.full(idx.shape, 1.0 / len(offs), np.float32)
+            with use_mesh(mesh):
+                got_pp = jax.jit(
+                    lambda ps: spmd.gossip_ppermute(ps, specs, mesh, offsets, ("data",))
+                )(params)
+            got_ga = spmd.gossip_gather(params, jnp.asarray(idx, jnp.int32), jnp.asarray(wgt))
+            got_dn = spmd.gossip_dense(params, jnp.asarray(Wn, jnp.float32))
+            for k in params:
+                tag = f"A={A} offsets={offsets} leaf={k}"
+                np.testing.assert_allclose(
+                    np.asarray(got_pp[k]), np.asarray(got_ga[k]),
+                    rtol=2e-5, atol=2e-6, err_msg="ppermute vs gather " + tag)
+                np.testing.assert_allclose(
+                    np.asarray(got_pp[k]), np.asarray(got_dn[k]),
+                    rtol=2e-5, atol=2e-6, err_msg="ppermute vs dense " + tag)
+    print("GOSSIP_COLLISION_OK")
+    """
+)
+
+
+def test_gossip_ppermute_normalizes_over_distinct_targets():
+    """Regression: ring offsets colliding mod A (e.g. A=4, offsets=(1, 2):
+    +2 and -2 are the same neighbour) used to be double-counted by the
+    ppermute path at weight 2/(2|offsets|) while the dense/sparse W stores
+    a single unit entry. All three gossip paths must agree on the
+    distinct-target normalization for every small-A offset combination,
+    including A-dividing offsets (self-loops)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    env.pop("JAX_ENABLE_X64", None)
+    res = subprocess.run(
+        [sys.executable, "-c", GOSSIP_COLLISION_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "GOSSIP_COLLISION_OK" in res.stdout
+
+
 def test_decode_step_sharded_single_device():
     mesh = make_mesh_1dev()
     cfg = get_reduced("granite-3-8b", dtype="float32")
