@@ -3,11 +3,17 @@
 Where ``bench_async_engine`` drives the single-device batched engine,
 this bench shards the agents across S devices via the ``shard_map``
 super-tick: per-shard wake batches, a halo exchange of the start-of-slot
-border rows, shard-local gather/mix/scatter. This is the configuration
-that takes agent counts past one device's memory — the bench asserts no
-O(n^2) array exists anywhere and reports partition/communication stats
-(halo fraction) alongside super-tick and equivalent-sequential-tick
-rates.
+border rows, shard-local gather/mix/scatter over shard-resident data
+tiles. This is the configuration that takes agent counts past one
+device's memory — the bench asserts no O(n^2) array exists anywhere and
+reports partition/communication stats alongside super-tick and
+equivalent-sequential-tick rates.
+
+Communication sweep: for {no relabel, RCM} x {all_gather, p2p} it
+reports the measured halo fraction and the interconnect bytes shipped
+per super-tick (rows x p x 4 bytes for the f32 engine dtype) — the
+numbers behind the ``exchange="auto"`` selection. The timed run uses
+``--relabel``/``--exchange`` (default: RCM + auto).
 
 Run it with forced host devices (the flag must be set before jax loads,
 so ``main`` sets it for you when possible):
@@ -16,8 +22,8 @@ so ``main`` sets it for you when possible):
         PYTHONPATH=src python -m benchmarks.bench_sharded_engine --n 1000000
 
 ``benchmarks/run.py --only sharded_engine`` invokes this module in a
-subprocess with 8 forced host devices and records the result in the
-bench summary.
+subprocess with 8 forced host devices and merges every ``sharded_*`` CSV
+row it prints into the bench summary.
 """
 
 from __future__ import annotations
@@ -30,6 +36,40 @@ import time
 import numpy as np
 
 
+def exchange_stats(graph, shards: int, p: int, partition_mode: str = "degree"):
+    """Halo fraction + exchanged bytes/super-tick for the relabel x method grid.
+
+    Pure-numpy partition analysis (no engine build): returns CSV-style
+    rows ``(name, value, note)`` for {norelabel, rcm} x {all_gather, p2p},
+    plus the built partitions keyed by relabel mode so the caller can
+    reuse one for the engine instead of rebuilding it. Bytes assume the
+    f32 engine dtype (4 bytes) and count padded rows, because static
+    shapes ship them.
+    """
+    from repro.sim import partition_graph
+    from repro.core.mixing import sharded_mix_op
+
+    rows, parts = [], {}
+    for label, relabel in (("norelabel", None), ("rcm", "rcm")):
+        t0 = time.time()
+        part = partition_graph(graph, shards, mode=partition_mode, relabel=relabel)
+        build_s = time.time() - t0
+        parts[relabel] = part
+        auto = sharded_mix_op(part).method
+        rows.append(
+            (f"sharded_halo_frac_{label}", part.halo_fraction(),
+             f"S={shards} mode={partition_mode} auto_method={auto} "
+             f"partition_build={build_s:.1f}s")
+        )
+        for method in ("all_gather", "p2p"):
+            nbytes = part.exchange_rows(method) * p * 4
+            rows.append(
+                (f"sharded_exchange_bytes_{label}_{method}", float(nbytes),
+                 f"rows={part.exchange_rows(method)} p={p} f32 bytes/super-tick")
+            )
+    return rows, parts
+
+
 def run(
     n: int = 1_000_000,
     p: int = 8,
@@ -40,8 +80,11 @@ def run(
     seed: int = 0,
     churn: bool = True,
     partition_mode: str = "degree",
+    relabel: str | None = "rcm",
+    exchange: str = "auto",
     verbose: bool = True,
 ):
+    """Time the sharded engine at scale and report the comm sweep rows."""
     import jax
 
     from benchmarks.bench_sparse_scale import _make_problem
@@ -59,6 +102,11 @@ def run(
     graph, obj = _make_problem(n, p, m, rng)
     build_s = time.time() - t0
 
+    # Communication sweep: {no relabel, RCM} x {all_gather, p2p}. The
+    # sweep's partitions are reused for the timed engine when the config
+    # matches, so the (RCM + cut + tile) build runs once, not twice.
+    stats_rows, parts = exchange_stats(graph, shards, p, partition_mode)
+
     scenario = Scenario(
         churn=ChurnConfig(leave_prob=0.01, rejoin_prob=0.2) if churn else None
     )
@@ -67,6 +115,9 @@ def run(
         CDUpdate(obj),
         num_shards=shards,
         partition_mode=partition_mode,
+        relabel=relabel,
+        exchange=exchange,
+        partition=parts.get(relabel),
         slot_wakes=slot_wakes,
         scenario=scenario,
         seed=seed,
@@ -103,18 +154,22 @@ def run(
     assert steady_applied > 0
     ticks_per_s = steady_applied / max(steady_s, 1e-9)
     deg = np.diff(graph.indptr)
+    xbytes = part.exchange_rows(engine.exchange_method) * p * 4
     rows = [
         ("sharded_graph_build", build_s * 1e6 / max(n, 1),
          f"n={n} deg~{deg.mean():.1f} us/agent"),
-        ("sharded_partition", part_s * 1e6 / max(n, 1),
-         f"S={shards} mode={partition_mode} R={part.rows_per_shard} "
-         f"halo_frac={part.halo_fraction():.3f} us/agent"),
+        ("sharded_engine_build", part_s * 1e6 / max(n, 1),
+         f"S={shards} mode={partition_mode} relabel={relabel} R={part.rows_per_shard} "
+         f"halo_frac={part.halo_fraction():.3f} us/agent "
+         "(partition reused from the sweep; per-config partition_build "
+         "times are on the halo_frac rows)"),
         ("sharded_super_tick", steady_s * 1e6 / slots,
-         f"n={n} S={shards} B={engine.batch_size} churn={int(churn)} us/slot"),
+         f"n={n} S={shards} B={engine.batch_size} churn={int(churn)} "
+         f"exchange={engine.exchange_method} xbytes={xbytes} us/slot"),
         ("sharded_equiv_ticks_per_s", ticks_per_s,
          f"{applied} wakes applied, {int(np.asarray(state.dropped).sum())} dropped, "
          f"compile {compile_s:.1f}s"),
-    ]
+    ] + stats_rows
     if verbose:
         for name, v, note in rows:
             print(f"{name},{v:.4g},{note}")
@@ -122,6 +177,7 @@ def run(
 
 
 def main(argv=None):
+    """CLI entry point; forces host-platform devices when still possible."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1_000_000)
     ap.add_argument("--shards", type=int, default=8)
@@ -130,6 +186,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-churn", action="store_true")
     ap.add_argument("--mode", default="degree", choices=["degree", "contiguous"])
+    ap.add_argument("--relabel", default="rcm", choices=["rcm", "none"])
+    ap.add_argument("--exchange", default="auto",
+                    choices=["auto", "all_gather", "p2p"])
     args = ap.parse_args(argv)
     if "jax" not in sys.modules and "host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""
@@ -147,6 +206,8 @@ def main(argv=None):
         seed=args.seed,
         churn=not args.no_churn,
         partition_mode=args.mode,
+        relabel=None if args.relabel == "none" else args.relabel,
+        exchange=args.exchange,
     )
 
 

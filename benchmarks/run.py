@@ -150,14 +150,18 @@ def main(argv=None) -> None:
         )
         if proc.returncode != 0:
             raise RuntimeError(f"sharded_engine bench failed:\n{proc.stderr[-3000:]}")
-        rate = next(
-            (
-                float(line.split(",")[1])
-                for line in proc.stdout.splitlines()
-                if line.startswith("sharded_equiv_ticks_per_s,")
-            ),
-            None,
-        )
+        # Merge every sharded_* CSV row the subprocess printed (tick
+        # rates, partition stats, the halo-fraction / exchanged-bytes
+        # sweep over {no relabel, RCM} x {all_gather, p2p}) into the
+        # summary under its own name.
+        rate = None
+        for line in proc.stdout.splitlines():
+            if not line.startswith("sharded_") or line.count(",") < 2:
+                continue
+            name, val, note = line.split(",", 2)
+            rows.append((name, float(val), note))
+            if name == "sharded_equiv_ticks_per_s":
+                rate = float(val)
         if rate is None:
             raise RuntimeError(
                 "sharded_engine bench printed no sharded_equiv_ticks_per_s "

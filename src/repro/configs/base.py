@@ -165,6 +165,13 @@ class P2PConfig:
     clip: float = 10.0  # per-example grad clip C (Supp. D.2)
     gossip_dtype: str = "bfloat16"  # payload dtype for Theta exchange
 
+    def __post_init__(self):
+        # The three gossip paths (ppermute / sparse / dense) carry
+        # divergent legacy fallbacks for an empty ring, so reject it here
+        # rather than let them silently disagree.
+        if self.enabled and not self.neighbor_offsets:
+            raise ValueError("neighbor_offsets must name at least one ring offset")
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class RunConfig:

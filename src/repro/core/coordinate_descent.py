@@ -56,16 +56,29 @@ def cd_update(obj: Objective, Theta, i):
     return Theta.at[i].set(new_i)
 
 
+def _agent_grad_from_data(obj: Objective, theta_i, X_i, y_i, mask_i, lam):
+    """grad L_i at theta_i from one agent's already-gathered data rows.
+
+    ``X_i``: (m, p), ``y_i``/``mask_i``: (m,), ``lam``: scalar — all in
+    ``theta_i``'s dtype. The one gradient formula every execution path
+    (sequential scans, both engines, sharded constants) reduces to.
+    """
+    m = jnp.maximum(mask_i.sum(), 1.0)
+    g = obj._point_grads(theta_i, X_i, y_i)
+    return jnp.sum(g * mask_i[:, None], axis=0) / m + 2.0 * lam * theta_i
+
+
 def _single_agent_grad(obj: Objective, theta_i, i):
     """grad L_i at theta_i for (possibly traced) agent index i."""
     dt = theta_i.dtype
-    X = jnp.asarray(obj.data.X, dt)[i]
-    y = jnp.asarray(obj.data.y, dt)[i]
-    mask = jnp.asarray(obj.data.mask, dt)[i]
-    lam = jnp.asarray(obj.lambdas, dt)[i]
-    m = jnp.maximum(mask.sum(), 1.0)
-    g = obj._point_grads(theta_i, X, y)
-    return jnp.sum(g * mask[:, None], axis=0) / m + 2.0 * lam * theta_i
+    return _agent_grad_from_data(
+        obj,
+        theta_i,
+        jnp.asarray(obj.data.X, dt)[i],
+        jnp.asarray(obj.data.y, dt)[i],
+        jnp.asarray(obj.data.mask, dt)[i],
+        jnp.asarray(obj.lambdas, dt)[i],
+    )
 
 
 def batched_agent_grads(obj: Objective, theta_rows, rows):
@@ -77,31 +90,77 @@ def batched_agent_grads(obj: Objective, theta_rows, rows):
     return jax.vmap(lambda th, i: _single_agent_grad(obj, th, i))(theta_rows, rows)
 
 
+def eq4_agent_constants(obj: Objective) -> dict:
+    """The per-agent constants (leading dim n) the Eq. 4/6 row step reads.
+
+    This is the pytree the sharded engine tiles into (S, R, ...) blocks
+    so the super-tick never closes over an (n, ...) array: ``deg``/
+    ``conf``/``alpha``/``lam`` are (n,) theory constants and ``X``
+    (n, m, p) / ``y`` / ``mask`` (n, m) the padded per-agent datasets.
+    Arrays keep their original (f64) dtypes; consumers cast elementwise
+    after gathering, which commutes with the gather — the bit-exactness
+    bridge between the replicated and shard-resident paths.
+    """
+    return {
+        "deg": obj.degrees,
+        "conf": obj.confidences,
+        "alpha": obj.alphas(),
+        "lam": obj.lambdas,
+        "X": obj.data.X,
+        "y": obj.data.y,
+        "mask": obj.data.mask,
+    }
+
+
+def eq4_theta_rows_from(obj: Objective, theta, neigh, consts, grad_noise=None):
+    """Batched Eq. 4 update from pre-gathered per-agent constants.
+
+    ``theta``/``neigh``: (B, p) current rows and their raw neighbour sums
+    ``sum_j W_ij Theta_j``. ``consts``: the row-gathered slice of
+    :func:`eq4_agent_constants` — each leaf is (B, ...) and row-aligned
+    with ``theta``. ``grad_noise``: optional (B, p) perturbation added to
+    the local gradient (the Eq. 6 private update); None recovers the
+    non-private algorithm. Returns the (B, p) replacement rows.
+    """
+    dt = theta.dtype
+    d = jnp.asarray(consts["deg"], dt)
+    c = jnp.asarray(consts["conf"], dt)
+    a = jnp.asarray(consts["alpha"], dt)
+    grads = jax.vmap(lambda th, Xi, yi, mi, l: _agent_grad_from_data(obj, th, Xi, yi, mi, l))(
+        theta,
+        jnp.asarray(consts["X"], dt),
+        jnp.asarray(consts["y"], dt),
+        jnp.asarray(consts["mask"], dt),
+        jnp.asarray(consts["lam"], dt),
+    )
+    if grad_noise is not None:
+        grads = grads + grad_noise
+    return (1.0 - a[:, None]) * theta + a[:, None] * (
+        neigh / d[:, None] - obj.mu * c[:, None] * grads
+    )
+
+
 def eq4_theta_rows(obj: Objective, theta, rows, neigh, grad_noise=None):
     """Batched Eq. 4 update for already-gathered rows — the one formula
     shared by the sequential simulators and both ``repro.sim`` engines.
 
     ``theta``: (B, p) current parameter rows (the sharded engine gathers
     them from its local block; :func:`eq4_rows` gathers from the global
-    Theta). ``rows``: (B,) *global* agent indices, used for the per-agent
-    constants and data (may be traced; out-of-range padding sentinels
-    clamp on gather — callers drop those rows on scatter). ``neigh``:
-    (B, p) raw neighbour sums ``sum_j W_ij Theta_j`` for those rows.
-    ``grad_noise``: optional (B, p) perturbation added to the local
+    Theta). ``rows``: (B,) *global* agent indices, used to gather the
+    per-agent constants and data (may be traced; out-of-range padding
+    sentinels clamp on gather — callers drop those rows on scatter).
+    ``neigh``: (B, p) raw neighbour sums ``sum_j W_ij Theta_j`` for those
+    rows. ``grad_noise``: optional (B, p) perturbation added to the local
     gradient — passing the Laplace/Gaussian draw makes this the Eq. 6
     private update; None (or zeros) recovers the non-private algorithm.
     Returns the (B, p) replacement rows.
+
+    The gathers here read the *replicated* (n, ...) arrays; the sharded
+    engine instead gathers from its (R, ...) shard-resident tiles and
+    calls :func:`eq4_theta_rows_from` directly with the result.
     """
-    dt = theta.dtype
-    d = jnp.asarray(obj.degrees, dt)[rows]
-    c = jnp.asarray(obj.confidences, dt)[rows]
-    a = jnp.asarray(obj.alphas(), dt)[rows]
-    grads = batched_agent_grads(obj, theta, rows)
-    if grad_noise is not None:
-        grads = grads + grad_noise
-    return (1.0 - a[:, None]) * theta + a[:, None] * (
-        neigh / d[:, None] - obj.mu * c[:, None] * grads
-    )
+    consts = jax.tree.map(lambda arr: jnp.asarray(arr)[rows], eq4_agent_constants(obj))
+    return eq4_theta_rows_from(obj, theta, neigh, consts, grad_noise=grad_noise)
 
 
 def eq4_rows(obj: Objective, Theta, rows, neigh, grad_noise=None):

@@ -449,12 +449,16 @@ def random_geometric_graph(
     radius: float | None = None,
     weight: float = 1.0,
     min_degree: int = 1,
-) -> CSRGraph:
+    return_pos: bool = False,
+) -> CSRGraph | tuple[CSRGraph, np.ndarray]:
     """Random geometric graph on [0, 1]^2 via grid-cell bucketing: O(n * deg).
 
     Agents are uniform points; i ~ j iff ||x_i - x_j|| <= radius (default
     radius targets ``avg_degree`` via E[deg] = n pi r^2). Isolated agents are
     linked to their nearest peer so every D_ii > 0 (Eq. 4 divides by it).
+    With ``return_pos`` the (n, 2) agent positions are returned alongside
+    the graph — the coordinates a space-filling-curve relabel pass
+    (``repro.sim.partition.sfc_order``) sorts by.
     """
     pos = rng.random((n, 2))
     if radius is None:
@@ -499,9 +503,8 @@ def random_geometric_graph(
             nearest = np.argpartition(d2, need)[:need]
             rows = np.append(rows, np.full(need, i))
             cols = np.append(cols, nearest)
-    return csr_from_coo(
-        n, rows, cols, np.full(len(rows), weight), symmetrize=True
-    )
+    csr = csr_from_coo(n, rows, cols, np.full(len(rows), weight), symmetrize=True)
+    return (csr, pos) if return_pos else csr
 
 
 def confidences(num_examples: np.ndarray, floor: float = 1e-3) -> np.ndarray:

@@ -146,18 +146,35 @@ class ShardedMixOp:
     """Shard-local neighbour sums with halo exchange over an agent partition.
 
     The multi-device counterpart of :meth:`MixOp.gather_rows`: agents are
-    contiguous blocks on a ``shard_map`` mesh axis, each shard holds its
-    own (R, p) Theta block, and cross-shard edges are served by a halo
-    exchange — every shard publishes its border rows, one ``all_gather``
-    replicates the (small) border pool, and each shard gathers exactly the
-    remote rows its tiles reference. Per-shard padded tiles keep the CSR
-    neighbour order and the single-device tile width K, so the per-row
-    reduction is bit-identical to :meth:`MixOp.gather_rows`'s sparse path.
+    position-contiguous blocks on a ``shard_map`` mesh axis, each shard
+    holds its own (R, p) Theta block, and cross-shard edges are served by
+    a **halo exchange** with two interchangeable wire formats:
 
-    The stacked (S, ...) arrays here are *inputs* to the shard_map'd
-    caller (sliced per shard by ``in_specs``), never closed over — a
-    closure would replicate the O(nnz) tiles onto every device, which is
-    exactly what sharding exists to avoid.
+    * ``method="all_gather"`` — every shard publishes its (Bmax,) border
+      rows, one ``all_gather`` replicates the (S, Bmax, p) pool, and each
+      shard gathers exactly the remote rows its tiles reference. One
+      static collective, but the pool is replicated: each shard receives
+      (S-1) * Bmax rows however few it needs — the right trade when the
+      cut is dense (high halo fraction).
+    * ``method="p2p"`` — one ``ppermute`` per mesh-ring offset in the
+      partition's :func:`repro.sim.partition.point_to_point_plan`: each
+      shard ships only the rows its ring-offset neighbour actually reads
+      (padded to the per-offset max P_d) and scatters received rows into
+      its halo slots. Each shard receives sum_d P_d rows — the right
+      trade once a locality relabel has shrunk the cut to a few
+      neighbour shards.
+
+    Both formats fill the identical halo slots with identical row copies,
+    so everything downstream — and therefore the two methods — is
+    bit-exact-interchangeable. ``method="auto"`` in
+    :func:`sharded_mix_op` picks whichever ships fewer rows per
+    super-tick for the measured cut.
+
+    The stacked (S, ...) plan arrays (``exchange_inputs``) and tiles are
+    *inputs* to the shard_map'd caller (sliced per shard by
+    ``in_specs``), never closed over — a closure would replicate the
+    O(nnz) tiles onto every device, which is exactly what sharding
+    exists to avoid.
     """
 
     n: int
@@ -166,22 +183,49 @@ class ShardedMixOp:
     w: np.ndarray  # (S, R, K) weights (pad entries 0)
     border: np.ndarray  # (S, Bmax) local rows each shard publishes
     halo_src: np.ndarray  # (S, Hmax) flat index into the (S * Bmax,) border pool
+    method: str = "all_gather"  # "all_gather" | "p2p"
+    halo_width: int = 1  # Hmax: halo slots per shard in the extended array
+    p2p_offsets: tuple[int, ...] = ()  # static ring offsets, one ppermute each
+    p2p_send: tuple[np.ndarray, ...] = ()  # per offset: (S, P_d) local rows to ship
+    p2p_dst: tuple[np.ndarray, ...] = ()  # per offset: (S, P_d) halo slots, sentinel Hmax
     axis: str = "shards"
 
     @property
     def rows_per_shard(self) -> int:
+        """R: padded rows per shard."""
         return self.idx.shape[1]
 
-    def exchange_halo(self, Theta_local, border_s, halo_src_s):
+    def exchange_inputs(self):
+        """The stacked (S, ...) plan arrays the chosen method consumes.
+
+        Pass this pytree through ``shard_map`` with a leading-axis spec
+        (never close over it) and hand the per-shard slice to
+        :meth:`exchange_halo`.
+        """
+        if self.method == "p2p":
+            return {"send": self.p2p_send, "dst": self.p2p_dst}
+        return {"border": self.border, "halo_src": self.halo_src}
+
+    def exchange_halo(self, Theta_local, ex):
         """Extend this shard's (R, p) block with its halo rows.
 
-        Runs inside ``shard_map``: publishes the border rows, all-gathers
-        the (S, Bmax, p) pool, and gathers this shard's halo rows out of
-        it. Returns the (R + Hmax, p) extended array the tiles index.
+        Runs inside ``shard_map``. ``ex`` is this shard's slice of
+        :meth:`exchange_inputs` (leading S axis already consumed).
+        Returns the (R + Hmax, p) extended array the tiles index; halo
+        slots past this shard's real halo size are unreferenced by the
+        tiles (all_gather leaves pool rows there, p2p leaves zeros).
         """
-        send = Theta_local[border_s]  # (Bmax, p)
+        if self.method == "p2p":
+            halo = jnp.zeros((self.halo_width,) + Theta_local.shape[1:], Theta_local.dtype)
+            S = self.num_shards
+            for off, snd, dst in zip(self.p2p_offsets, ex["send"], ex["dst"]):
+                perm = [(s, (s + off) % S) for s in range(S)]
+                recv = jax.lax.ppermute(Theta_local[snd], self.axis, perm)  # (P_d, p)
+                halo = halo.at[dst].set(recv, mode="drop")  # sentinel Hmax drops padding
+            return jnp.concatenate([Theta_local, halo], axis=0)
+        send = Theta_local[ex["border"]]  # (Bmax, p)
         pool = jax.lax.all_gather(send, self.axis)  # (S, Bmax, p)
-        halo = pool.reshape((-1,) + pool.shape[2:])[halo_src_s]  # (Hmax, p)
+        halo = pool.reshape((-1,) + pool.shape[2:])[ex["halo_src"]]  # (Hmax, p)
         return jnp.concatenate([Theta_local, halo], axis=0)
 
     def gather_rows(self, Theta_ext, idx_s, w_s, rows):
@@ -197,8 +241,28 @@ class ShardedMixOp:
         return jnp.einsum("bk,bkp->bp", ww, Theta_ext[cols])
 
 
-def sharded_mix_op(partition, axis: str = "shards") -> ShardedMixOp:
-    """Build the halo-exchange operator for a :class:`GraphPartition`."""
+def sharded_mix_op(partition, axis: str = "shards", method: str = "auto") -> ShardedMixOp:
+    """Build the halo-exchange operator for a :class:`GraphPartition`.
+
+    ``method``: ``"all_gather"`` (replicated border pool), ``"p2p"``
+    (neighbour-shard ``ppermute`` exchange), or ``"auto"`` — go
+    point-to-point only when it ships at most 3/4 of the all_gather
+    rows on this partition's measured cut
+    (``GraphPartition.exchange_rows``): a dense cut (high halo
+    fraction, e.g. unrelabeled shuffled labels) pays S-1 ppermutes for
+    barely less volume, so it falls back to the single fused
+    collective; a locality-relabeled cut ships a small fraction and
+    wins outright.
+    """
+    if method == "auto":
+        method = (
+            "p2p"
+            if 4 * partition.exchange_rows("p2p") <= 3 * partition.exchange_rows("all_gather")
+            else "all_gather"
+        )
+    if method not in ("all_gather", "p2p"):
+        raise ValueError(f"unknown exchange method {method!r}")
+    offsets, sends, dsts = partition.p2p_plan if method == "p2p" else ((), (), ())
     return ShardedMixOp(
         n=partition.n,
         num_shards=partition.num_shards,
@@ -206,6 +270,11 @@ def sharded_mix_op(partition, axis: str = "shards") -> ShardedMixOp:
         w=partition.w,
         border=partition.border,
         halo_src=partition.halo_src,
+        method=method,
+        halo_width=partition.halo.shape[1],
+        p2p_offsets=offsets,
+        p2p_send=sends,
+        p2p_dst=dsts,
         axis=axis,
     )
 

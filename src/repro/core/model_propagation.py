@@ -59,6 +59,21 @@ def propagation_update(graph: AgentGraph | CSRGraph, Theta, theta_loc, mu, confi
     return (neigh + mu * confidences[i] * theta_loc[i]) / (1.0 + mu * confidences[i])
 
 
+def propagation_rows_from(mu, d, c, loc, neigh):
+    """Batched Eq. 16 from pre-gathered per-agent constants.
+
+    ``d``/``c``: (B,) degrees and confidences, ``loc``: (B, p) local
+    models, ``neigh``: (B, p) raw neighbour sums — all row-aligned. The
+    sharded engine gathers these from its shard-resident tiles;
+    :func:`propagation_rows` gathers them from the replicated arrays.
+    """
+    dt = neigh.dtype
+    d = jnp.asarray(d, dt)
+    c = jnp.asarray(c, dt)
+    loc = jnp.asarray(loc, dt)
+    return (neigh / d[:, None] + mu * c[:, None] * loc) / (1.0 + mu * c[:, None])
+
+
 def propagation_rows(degrees, theta_loc, mu, confidences, rows, neigh):
     """Batched Eq. 16 for a gathered row set (jit-able, traced ``rows``).
 
@@ -68,10 +83,13 @@ def propagation_rows(degrees, theta_loc, mu, confidences, rows, neigh):
     gather/mix/scatter path as Eq. 4.
     """
     dt = neigh.dtype
-    d = jnp.asarray(degrees, dt)[rows]
-    c = jnp.asarray(confidences, dt)[rows]
-    loc = jnp.asarray(theta_loc, dt)[rows]
-    return (neigh / d[:, None] + mu * c[:, None] * loc) / (1.0 + mu * c[:, None])
+    return propagation_rows_from(
+        mu,
+        jnp.asarray(degrees, dt)[rows],
+        jnp.asarray(confidences, dt)[rows],
+        jnp.asarray(theta_loc, dt)[rows],
+        neigh,
+    )
 
 
 def run_propagation(

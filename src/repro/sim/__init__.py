@@ -1,9 +1,17 @@
-# Batched asynchronous simulation engine: Poisson-thinned super-ticks with
-# churn / delay / straggler scenarios, driving CD, DP-CD, and model
-# propagation through one LocalUpdate protocol. The architectural bridge
-# between the faithful O(T) simulator (repro.core.coordinate_descent) and
-# the synchronous SPMD scale layer (repro.core.spmd). See engine.py's
-# docstring for the recorded deviations from pure Poisson semantics.
+"""Batched asynchronous simulation engine.
+
+Poisson-thinned super-ticks with churn / delay / straggler scenarios,
+driving CD, DP-CD, and model propagation through one ``LocalUpdate``
+protocol. The architectural bridge between the faithful O(T) simulator
+(``repro.core.coordinate_descent``) and the synchronous SPMD scale layer
+(``repro.core.spmd``); ``ShardedAsyncEngine`` spreads the agent blocks —
+models, datasets, and theory constants alike — over a device mesh with
+locality-aware partitioning (``partition.py``) and a halo exchange
+(``repro.core.mixing.ShardedMixOp``). See ``docs/ARCHITECTURE.md`` for
+the module map and ``docs/DEVIATIONS.md`` for the consolidated ledger of
+recorded deviations from pure Poisson semantics.
+"""
+
 from repro.sim.clocks import (
     default_batch_size,
     expected_wakes,
@@ -18,7 +26,13 @@ from repro.sim.engine import (
     SimResult,
     SimState,
 )
-from repro.sim.partition import GraphPartition, partition_graph
+from repro.sim.partition import (
+    GraphPartition,
+    partition_graph,
+    point_to_point_plan,
+    rcm_order,
+    sfc_order,
+)
 from repro.sim.scenarios import ChurnConfig, DelayConfig, Scenario, StragglerConfig
 from repro.sim.updates import CDUpdate, DPCDUpdate, LocalUpdate, PropagationUpdate
 
@@ -28,6 +42,9 @@ __all__ = [
     "ShardedAsyncEngine",
     "ShardedSimState",
     "partition_graph",
+    "point_to_point_plan",
+    "rcm_order",
+    "sfc_order",
     "CDUpdate",
     "ChurnConfig",
     "DelayConfig",

@@ -192,6 +192,7 @@ class AsyncEngine:
 
     # -- state ------------------------------------------------------------
     def init_state(self, Theta0, seed: int | None = None) -> SimState:
+        """Fresh engine state from an (n, p) initial model matrix."""
         Theta = jnp.asarray(Theta0, self.dtype)
         if Theta.shape != (self.n, self.p):
             raise ValueError(f"Theta0 must be {(self.n, self.p)}, got {Theta.shape}")
@@ -367,8 +368,8 @@ class _ShardStatic(NamedTuple):
     deg: jnp.ndarray  # (S, R) f32 |N_i| for message accounting
     idx: jnp.ndarray  # (S, R, K) extended-local neighbour indices
     w: jnp.ndarray  # (S, R, K) weights
-    border: jnp.ndarray  # (S, Bmax) published local rows
-    halo_src: jnp.ndarray  # (S, Hmax) flat border-pool indices
+    exchange: object  # pytree of stacked (S, ...) halo-exchange plan arrays
+    consts: object  # pytree of (S, R, ...) per-agent constant tiles (None: update has none)
 
 
 class ShardedAsyncEngine:
@@ -383,17 +384,29 @@ class ShardedAsyncEngine:
     engine, and scatters shard-locally. Only O(n/S) model state and
     O(nnz/S) graph tiles live per device.
 
-    Recorded deviations (extends the :class:`AsyncEngine` ledger):
+    Locality and communication: ``relabel="rcm"`` (or ``"sfc"`` with
+    ``coords``) permutes agent *positions* before block cutting so graph
+    neighbours co-locate and the cut shrinks (``partition.py``); ids
+    visible to callers stay original under any relabeling —
+    ``global_theta``/``SimResult`` need no unrelabel step. ``exchange``
+    picks the halo wire format: ``"all_gather"`` (replicated border
+    pool), ``"p2p"`` (neighbour-shard ``ppermute`` exchange), or
+    ``"auto"`` (whichever moves fewer rows on the measured cut); the two
+    formats are bit-exact interchangeable.
 
-    * **replicated border pool** — the halo exchange all-gathers every
-      shard's border rows to every shard (volume S * Bmax * p per slot)
-      instead of point-to-point sends; for spatially-partitioned graphs
-      the border is the O(surface) cut, so this is small, and it keeps
-      the exchange a single static-shape collective;
-    * **replicated data** — per-agent datasets and theory constants
-      (``obj.data``, degrees, confidences) stay replicated jit constants;
-      only Theta, churn state, and the update state are sharded (sharded
-      data loading is an open ROADMAP item);
+    Per-agent data and theory constants are **shard-resident**: the
+    engine tiles ``update.agent_constants()`` (datasets X/y/mask,
+    degrees, confidences, alphas, noise scales) into (S, R, ...) blocks
+    passed through ``shard_map`` like the graph tiles, so the super-tick
+    closes over no replicated (n, ...) array and dataset memory scales
+    with S.
+
+    Recorded deviations (extends the :class:`AsyncEngine` ledger; the
+    consolidated list lives in ``docs/DEVIATIONS.md``):
+
+    * **padded exchange volume** — both exchange methods ship
+      static-shape buffers (Bmax / per-offset P_d maxima over shards),
+      so uneven cuts pay the max, not their own size;
     * **per-shard clocks** — each shard draws its own wake/churn
       randomness, so sampled trajectories differ from the single-device
       engine's stream while matching in distribution; forced wake sets
@@ -411,6 +424,10 @@ class ShardedAsyncEngine:
         *,
         num_shards: int,
         partition_mode: str = "degree",
+        relabel: str | np.ndarray | None = None,
+        coords: np.ndarray | None = None,
+        exchange: str = "auto",
+        partition=None,
         slot_wakes: float = 64.0,
         rates=None,
         batch_size: int | None = None,
@@ -439,10 +456,26 @@ class ShardedAsyncEngine:
                 f"have {len(devices)}"
             )
         self.mesh = Mesh(np.asarray(devices[:num_shards]), ("shards",))
-        self.part = partition_graph(
-            as_csr(update.graph), num_shards, mode=partition_mode
-        )
-        self.smix = sharded_mix_op(self.part)
+        if partition is not None:
+            # Reuse a prebuilt GraphPartition (e.g. one already analysed
+            # for exchange stats) instead of re-running the relabel/cut/
+            # tile build; it must describe the same graph and shard count.
+            if partition.n != self.n or partition.num_shards != num_shards:
+                raise ValueError(
+                    f"prebuilt partition is (n={partition.n}, S={partition.num_shards}), "
+                    f"engine needs (n={self.n}, S={num_shards})"
+                )
+            self.part = partition
+        else:
+            self.part = partition_graph(
+                as_csr(update.graph),
+                num_shards,
+                mode=partition_mode,
+                relabel=relabel,
+                coords=coords,
+            )
+        self.smix = sharded_mix_op(self.part, method=exchange)
+        self.exchange_method = self.smix.method
         self.num_shards = self.part.num_shards
 
         self.rates = clocks.normalize_rates(rates, self.n)
@@ -454,9 +487,13 @@ class ShardedAsyncEngine:
                 raise ValueError(f"batch_size must lie in (0, R={R}]")
             self.batch_size = int(batch_size)
         else:
+            # Size B from each shard's *owned agents'* rates — under a
+            # relabel, bounds index positions, not agent ids, so a
+            # positional slice of `rates` would size the batch for the
+            # wrong agents.
             per_shard = max(
                 clocks.default_batch_size(
-                    self.rates[self.part.bounds[s] : self.part.bounds[s + 1]], self.tau
+                    self.rates[self.part.owned[s, : int(self.part.sizes[s])]], self.tau
                 )
                 for s in range(self.num_shards)
             )
@@ -476,6 +513,21 @@ class ShardedAsyncEngine:
             v = zeros if v is None else v.astype(np.float32)
             return jnp.asarray(part.pad_rows(v))
 
+        # Shard-resident per-agent constants: tiled along the same agent
+        # blocks as Theta and passed through shard_map (never closed
+        # over), so dataset memory scales with S instead of replicating
+        # obj.data onto every device. Float leaves are pre-cast to the
+        # engine dtype — elementwise cast commutes with the row gather,
+        # so this is bit-identical to the single-device
+        # cast-then-gather while halving the tile bytes for f32 runs.
+        def const_tile(a):
+            a = np.asarray(a)
+            if np.issubdtype(a.dtype, np.floating):
+                a = a.astype(self.dtype)
+            return jnp.asarray(part.pad_rows(a))
+
+        consts_fn = getattr(self.update, "agent_constants", None)
+        consts_tiles = None if consts_fn is None else jax.tree.map(const_tile, consts_fn())
         self._static = _ShardStatic(
             wake_probs=jnp.asarray(part.pad_rows(self.wake_probs.astype(np.float32))),
             leave=prob_tiles(self._leave),
@@ -485,8 +537,8 @@ class ShardedAsyncEngine:
             deg=jnp.asarray(part.pad_rows(deg_counts)),
             idx=jnp.asarray(part.idx),
             w=jnp.asarray(part.w, self.dtype),
-            border=jnp.asarray(part.border),
-            halo_src=jnp.asarray(part.halo_src),
+            exchange=jax.tree.map(jnp.asarray, self.smix.exchange_inputs()),
+            consts=consts_tiles,
         )
 
         self._chunk = jax.jit(self._chunk_impl, static_argnums=2)
@@ -494,6 +546,8 @@ class ShardedAsyncEngine:
 
     # -- state ------------------------------------------------------------
     def init_state(self, Theta0, seed: int | None = None) -> ShardedSimState:
+        """Fresh sharded state from an (n, p) initial model matrix
+        (original agent order; the partition maps it to shard blocks)."""
         Theta = np.asarray(Theta0, self.dtype)
         if Theta.shape != (self.n, self.p):
             raise ValueError(f"Theta0 must be {(self.n, self.p)}, got {Theta.shape}")
@@ -549,14 +603,21 @@ class ShardedAsyncEngine:
         dropped = total - valid.sum().astype(jnp.int32)
 
         Theta = state.Theta[0]
-        Theta_ext = self.smix.exchange_halo(Theta, static.border[0], static.halo_src[0])
+        ex = jax.tree.map(lambda a: a[0], static.exchange)
+        Theta_ext = self.smix.exchange_halo(Theta, ex)
         neigh = self.smix.gather_rows(Theta_ext, static.idx[0], static.w[0], woken)
 
         safe = jnp.minimum(woken, R - 1)
         grows = jnp.where(valid, static.owned[0][safe], n)  # global ids, sentinel n
         ustate = jax.tree.map(lambda x: x[0], state.ustate)
+        consts_rows = (
+            None
+            if static.consts is None
+            else jax.tree.map(lambda t: t[0][safe], static.consts)
+        )
         new_rows, applied, ustate = self.update.apply_rows(
-            Theta[safe], grows, valid, neigh, k_upd, ustate, srows=woken, ssize=R
+            Theta[safe], grows, valid, neigh, k_upd, ustate,
+            srows=woken, ssize=R, consts=consts_rows,
         )
         tgt = jnp.where(applied, woken, R)
         Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")

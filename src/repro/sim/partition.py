@@ -3,30 +3,46 @@
 The paper's algorithm is fully decentralized — a wake-up touches one
 agent's neighbourhood only — so the natural way past one device's memory
 is to shard *agents* across devices. This module cuts a :class:`CSRGraph`
-into ``num_shards`` contiguous index blocks (equal-count blocks, or
-degree-balanced blocks that equalize per-shard nnz) and precomputes
-everything the shard-local super-tick needs as stacked ``(S, ...)``
-arrays that ``shard_map`` splits along the leading axis:
+into ``num_shards`` index blocks (equal-count blocks, or degree-balanced
+blocks that equalize per-shard nnz), optionally after a **locality
+relabel** pass (reverse Cuthill–McKee, or a Morton space-filling curve
+for geometric graphs) that permutes agent positions so that graph
+neighbours land in the same block and the cut — and with it the halo
+traffic — shrinks. It precomputes everything the shard-local super-tick
+needs as stacked ``(S, ...)`` arrays that ``shard_map`` splits along the
+leading axis:
 
-* ``owned``: each shard's global agent ids, padded to the max block size
-  ``R`` with the sentinel ``n``;
+* ``owned``: each shard's global agent ids (always *original* ids,
+  whatever the relabeling), padded to the max block size ``R`` with the
+  sentinel ``n``;
 * per-shard **padded neighbour tiles** ``idx``/``w`` of width ``K`` (the
   global max degree), whose column indices live in the shard's *extended*
   local array ``[own rows (R) ; halo rows (Hmax)]``;
 * **halo maps** for the cross-shard edges: ``halo`` lists the remote
-  global ids a shard reads, ``border`` lists the local rows a shard must
-  publish, and ``halo_src`` maps each halo slot to its position in the
-  all-gathered ``(S * Bmax,)`` border pool.
+  global ids a shard reads, ``halo_owner`` the shard that owns each of
+  them, ``border`` lists the local rows a shard must publish, and
+  ``halo_src`` maps each halo slot to its position in the all-gathered
+  ``(S * Bmax,)`` border pool;
+* a **point-to-point plan** (:func:`point_to_point_plan`): per
+  shard-offset ``d``, the local rows each shard ships to the shard ``d``
+  hops ahead on the mesh ring and the halo slots the receiver writes them
+  to — the ``ppermute`` alternative to the replicated border pool.
 
-The exchange itself (gather border rows -> ``all_gather`` -> gather halo
-rows) lives in :class:`repro.core.mixing.ShardedMixOp`; this module is
-pure numpy and is also used directly by the halo round-trip property
-tests.
+The exchange itself (all-gather pool or neighbour-shard ``ppermute``)
+lives in :class:`repro.core.mixing.ShardedMixOp`; this module is pure
+numpy and is also used directly by the halo round-trip property tests.
+
+Relabeling never leaks into caller-visible ids: ``owned``/``halo``/
+``shard_of``/``local_of`` all speak original agent ids, so
+``pad_rows``/``unpad_rows`` (and the engine's ``global_theta``) are the
+identity round-trip under any permutation — callers need no unrelabel
+step. The permutation itself is exposed as ``order`` for diagnostics.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -35,23 +51,28 @@ from repro.core.graph import CSRGraph
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class GraphPartition:
-    """A contiguous agent-block partition of a CSR graph with halo maps.
+    """An agent-block partition of a CSR graph with halo and exchange maps.
 
     Shapes: ``S = num_shards``, ``R = rows_per_shard`` (max block size),
     ``K = tile_width`` (max degree), ``Bmax``/``Hmax`` the padded border
-    and halo widths. All index arrays use the conventions above.
+    and halo widths. Shard ``s`` owns the agents at *positions*
+    ``[bounds[s], bounds[s+1])`` of the (possibly relabeled) ``order``;
+    all id-valued arrays hold original agent ids.
     """
 
     csr: CSRGraph
     num_shards: int
     mode: str
-    bounds: np.ndarray  # (S + 1,) block boundaries: shard s owns [b_s, b_{s+1})
-    owned: np.ndarray  # (S, R) global agent ids, sentinel n past the block
+    relabel: str | None  # None | "rcm" | "sfc" | "custom"
+    order: np.ndarray  # (n,) position -> original agent id (the relabel permutation)
+    bounds: np.ndarray  # (S + 1,) block boundaries in *positions* of ``order``
+    owned: np.ndarray  # (S, R) original agent ids, sentinel n past the block
     sizes: np.ndarray  # (S,) real rows per shard
-    shard_of: np.ndarray  # (n,) owning shard per agent
-    local_of: np.ndarray  # (n,) local row within the owning shard
+    shard_of: np.ndarray  # (n,) owning shard per agent (original ids)
+    local_of: np.ndarray  # (n,) local row within the owning shard (original ids)
     halo: np.ndarray  # (S, Hmax) remote global ids each shard reads, sentinel n
     halo_sizes: np.ndarray  # (S,)
+    halo_owner: np.ndarray  # (S, Hmax) owning shard per halo slot, sentinel S
     border: np.ndarray  # (S, Bmax) local rows each shard publishes, padded 0
     border_sizes: np.ndarray  # (S,)
     halo_src: np.ndarray  # (S, Hmax) flat index into the (S * Bmax,) border pool
@@ -60,20 +81,61 @@ class GraphPartition:
 
     @property
     def n(self) -> int:
+        """Total number of agents in the partitioned graph."""
         return self.csr.n
 
     @property
     def rows_per_shard(self) -> int:
+        """R: padded rows per shard (max block size over shards)."""
         return self.owned.shape[1]
 
     @property
     def tile_width(self) -> int:
+        """K: padded neighbour-tile width (>= global max degree)."""
         return self.idx.shape[2]
 
     def halo_fraction(self) -> float:
         """Mean fraction of read rows that cross shards (comm diagnostics)."""
         reads = self.sizes + self.halo_sizes
         return float(self.halo_sizes.sum() / max(reads.sum(), 1))
+
+    def neighbor_shards(self) -> list[np.ndarray]:
+        """Per-shard sorted array of the shards whose rows this shard reads.
+
+        Empty array for shards whose blocks have no cross-shard edge; a
+        shard never lists itself. This is the communication graph the
+        point-to-point exchange walks.
+        """
+        return [
+            np.unique(self.halo_owner[s, : int(self.halo_sizes[s])]).astype(np.int64)
+            for s in range(self.num_shards)
+        ]
+
+    @functools.cached_property
+    def p2p_plan(self) -> tuple[tuple[int, ...], tuple[np.ndarray, ...], tuple[np.ndarray, ...]]:
+        """Cached :func:`point_to_point_plan` for this partition."""
+        return point_to_point_plan(self)
+
+    def exchange_rows(self, method: str) -> int:
+        """Interconnect rows moved per super-tick under an exchange method.
+
+        ``"all_gather"``: every shard receives the other ``S - 1`` shards'
+        padded ``Bmax`` border rows from the replicated pool. ``"p2p"``:
+        every shard receives one padded ``P_d`` buffer per ring offset
+        ``d`` in the plan. Counts are rows summed over all shards (one row
+        = one ``(p,)`` model vector); padding rows are counted because
+        static shapes ship them. Used by the ``method="auto"`` selection
+        in :func:`repro.core.mixing.sharded_mix_op`.
+        """
+        S = self.num_shards
+        if S <= 1:
+            return 0
+        if method == "all_gather":
+            return S * (S - 1) * int(self.border.shape[1])
+        if method != "p2p":
+            raise ValueError(f"unknown exchange method {method!r}")
+        _, sends, _ = self.p2p_plan
+        return S * int(sum(s.shape[1] for s in sends))
 
     # -- row <-> shard layout conversions ---------------------------------
     def pad_rows(self, x, fill=0):
@@ -97,16 +159,135 @@ class GraphPartition:
         return out
 
 
-def _block_bounds(csr: CSRGraph, num_shards: int, mode: str) -> np.ndarray:
+# ---------------------------------------------------------------------------
+# Locality relabeling
+# ---------------------------------------------------------------------------
+
+
+def _rcm_order_numpy(csr: CSRGraph) -> np.ndarray:
+    """Pure-numpy reverse Cuthill–McKee fallback (scipy unavailable).
+
+    Per component: BFS from a minimum-degree start node, visiting each
+    frontier's unvisited neighbours in ascending-degree order, then
+    reverse the full visitation sequence. O(n + nnz log deg); the scipy
+    path is preferred at large n.
+    """
+    n = csr.n
+    deg = np.diff(csr.indptr)
+    visited = np.zeros(n, dtype=bool)
+    out = np.empty(n, dtype=np.int64)
+    pos = 0
+    for start in np.argsort(deg, kind="stable"):
+        if visited[start]:
+            continue
+        visited[start] = True
+        queue = [int(start)]
+        head = 0
+        while head < len(queue):
+            i = queue[head]
+            head += 1
+            out[pos] = i
+            pos += 1
+            nbrs = csr.neighbors(i)
+            nbrs = nbrs[~visited[nbrs]]
+            if len(nbrs):
+                nbrs = nbrs[np.argsort(deg[nbrs], kind="stable")]
+                visited[nbrs] = True
+                queue.extend(int(j) for j in nbrs)
+    return out[::-1].copy()
+
+
+def rcm_order(csr: CSRGraph) -> np.ndarray:
+    """Reverse Cuthill–McKee ordering: (n,) position -> agent id.
+
+    A bandwidth-reducing BFS relabeling: after it, graph neighbours sit at
+    nearby positions, so contiguous position blocks have O(boundary) cuts
+    instead of O(volume). Uses scipy's C implementation when available and
+    a pure-numpy BFS otherwise.
+    """
+    try:
+        from scipy.sparse import csr_matrix
+        from scipy.sparse.csgraph import reverse_cuthill_mckee
+    except ImportError:  # pragma: no cover - exercised where scipy is absent
+        return _rcm_order_numpy(csr)
+    mat = csr_matrix(
+        (np.asarray(csr.data), np.asarray(csr.indices), np.asarray(csr.indptr)),
+        shape=(csr.n, csr.n),
+    )
+    return np.asarray(reverse_cuthill_mckee(mat, symmetric_mode=True), dtype=np.int64)
+
+
+def sfc_order(coords: np.ndarray) -> np.ndarray:
+    """Morton (Z-order) space-filling-curve ordering of 2-D coordinates.
+
+    ``coords``: (n, 2) positions (any units; rescaled to the bounding
+    box). Each point is quantized to a 16-bit grid per axis and sorted by
+    the bit-interleaved Morton key, so spatially-close agents get nearby
+    positions — the right relabel for ``random_geometric_graph``-style
+    topologies where edges are short-range. Returns (n,) position ->
+    agent id.
+    """
+    c = np.asarray(coords, dtype=np.float64)
+    if c.ndim != 2 or c.shape[1] != 2:
+        raise ValueError(f"coords must be (n, 2), got {c.shape}")
+    mins = c.min(axis=0)
+    span = c.max(axis=0) - mins
+    span = np.where(span > 0.0, span, 1.0)
+    q = ((c - mins) / span * (2**16 - 1)).astype(np.uint64)
+
+    def spread(v):
+        # 16 significant bits -> 32, a zero between every pair of bits.
+        v = (v | (v << 8)) & np.uint64(0x00FF00FF)
+        v = (v | (v << 4)) & np.uint64(0x0F0F0F0F)
+        v = (v | (v << 2)) & np.uint64(0x33333333)
+        v = (v | (v << 1)) & np.uint64(0x55555555)
+        return v
+
+    key = (spread(q[:, 0]) << np.uint64(1)) | spread(q[:, 1])
+    return np.argsort(key, kind="stable").astype(np.int64)
+
+
+def _resolve_order(csr: CSRGraph, relabel, coords) -> tuple[str | None, np.ndarray]:
+    """Resolve the ``relabel`` argument into (mode name, order array)."""
+    n = csr.n
+    if relabel is None:
+        return None, np.arange(n, dtype=np.int64)
+    if isinstance(relabel, str):
+        if relabel == "rcm":
+            return "rcm", rcm_order(csr)
+        if relabel == "sfc":
+            if coords is None:
+                raise ValueError("relabel='sfc' needs coords: the (n, 2) agent positions")
+            order = sfc_order(coords)
+            if len(order) != n:
+                raise ValueError(f"coords rows ({len(order)}) != agents ({n})")
+            return "sfc", order
+        raise ValueError(f"unknown relabel mode {relabel!r} (use 'rcm', 'sfc', or an order)")
+    order = np.asarray(relabel, dtype=np.int64)
+    if order.shape != (n,) or not np.array_equal(np.sort(order), np.arange(n)):
+        raise ValueError("explicit relabel must be a permutation of arange(n)")
+    return "custom", order
+
+
+# ---------------------------------------------------------------------------
+# Block cutting
+# ---------------------------------------------------------------------------
+
+
+def _block_bounds(csr: CSRGraph, num_shards: int, mode: str, order: np.ndarray) -> np.ndarray:
+    """Cut the permuted position axis into ``num_shards`` blocks."""
     n, S = csr.n, num_shards
     if mode == "contiguous":
         return np.array([n * s // S for s in range(S + 1)], dtype=np.int64)
     if mode != "degree":
         raise ValueError(f"unknown partition mode {mode!r}")
-    # Degree-balanced: put boundaries at equal cumulative-nnz quantiles so
-    # every shard carries ~nnz/S edge work, whatever the degree skew.
+    # Degree-balanced: put boundaries at equal cumulative-nnz quantiles of
+    # the *permuted* degree sequence so every shard carries ~nnz/S edge
+    # work, whatever the degree skew or relabeling.
+    deg = np.diff(np.asarray(csr.indptr, dtype=np.int64))
+    cum = np.concatenate([[0], np.cumsum(deg[order])])
     target = csr.nnz * np.arange(1, S, dtype=np.float64) / S
-    cuts = np.searchsorted(np.asarray(csr.indptr, dtype=np.int64), target)
+    cuts = np.searchsorted(cum, target)
     bounds = np.concatenate([[0], cuts, [n]]).astype(np.int64)
     for s in range(1, S + 1):  # keep blocks non-empty and ordered
         bounds[s] = min(max(bounds[s], bounds[s - 1] + 1), n - (S - s))
@@ -115,20 +296,33 @@ def _block_bounds(csr: CSRGraph, num_shards: int, mode: str) -> np.ndarray:
 
 
 def partition_graph(
-    csr: CSRGraph, num_shards: int, mode: str = "degree", tile_width: int | None = None
+    csr: CSRGraph,
+    num_shards: int,
+    mode: str = "degree",
+    tile_width: int | None = None,
+    relabel: str | np.ndarray | None = None,
+    coords: np.ndarray | None = None,
 ) -> GraphPartition:
-    """Cut ``csr`` into contiguous agent blocks with halo/border maps.
+    """Cut ``csr`` into agent blocks with halo/border/exchange maps.
 
     ``mode``: "contiguous" (equal agent counts) or "degree" (equal nnz).
+    ``relabel``: None (cut original ids in index order), ``"rcm"``
+    (reverse Cuthill–McKee), ``"sfc"`` (Morton curve over ``coords``,
+    the (n, 2) agent positions), or an explicit (n,) permutation
+    (position -> agent id). Blocks are contiguous in the relabeled
+    position space; all returned id arrays stay in original ids, so
+    results need no unrelabel step.
     ``tile_width`` pads the neighbour tiles to at least the global max
     degree (the default), which keeps the per-row contraction extent
     identical to the single-device padded tiles — the forced-wake parity
-    guarantee rests on that.
+    guarantee rests on that, together with the tiles preserving the
+    original CSR neighbour order per row under any relabeling.
     """
     n, S = csr.n, int(num_shards)
     if not (1 <= S <= max(n, 1)):
         raise ValueError(f"num_shards must lie in [1, n={n}], got {S}")
-    bounds = _block_bounds(csr, S, mode)
+    relabel_mode, order = _resolve_order(csr, relabel, coords)
+    bounds = _block_bounds(csr, S, mode, order)
     sizes = np.diff(bounds).astype(np.int64)
     R = int(sizes.max())
     K = max(csr.max_degree(), 1)
@@ -142,29 +336,49 @@ def partition_graph(
     local_of = np.empty(n, dtype=np.int32)
     for s in range(S):
         lo, hi = int(bounds[s]), int(bounds[s + 1])
-        owned[s, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
-        shard_of[lo:hi] = s
-        local_of[lo:hi] = np.arange(hi - lo, dtype=np.int32)
+        ids = order[lo:hi]
+        owned[s, : hi - lo] = ids.astype(np.int32)
+        shard_of[ids] = s
+        local_of[ids] = np.arange(hi - lo, dtype=np.int32)
 
+    # Flat CSR row gathers per shard (reduces to the indptr slice when the
+    # order is the identity): cols/vals keep the original per-row
+    # neighbour order, which the bit-exactness guarantee rests on.
     indptr = np.asarray(csr.indptr, dtype=np.int64)
+    deg_all = np.diff(indptr)
+    shard_cols, shard_vals, shard_degs, shard_offs = [], [], [], []
     halos = []
     for s in range(S):
         lo, hi = int(bounds[s]), int(bounds[s + 1])
-        cols = csr.indices[indptr[lo] : indptr[hi]]
-        halos.append(np.unique(cols[(cols < lo) | (cols >= hi)]).astype(np.int32))
+        ids = order[lo:hi]
+        deg = deg_all[ids]
+        total = int(deg.sum())
+        # offs[e] = position of edge e within its row; reused by the tile
+        # build below as the tile column coordinate.
+        offs = np.arange(total, dtype=np.int64) - np.repeat(np.cumsum(deg) - deg, deg)
+        flat = np.repeat(indptr[ids], deg) + offs
+        cols = csr.indices[flat].astype(np.int64)
+        shard_cols.append(cols)
+        shard_vals.append(csr.data[flat])
+        shard_degs.append(deg)
+        shard_offs.append(offs)
+        halos.append(np.unique(cols[shard_of[cols] != s]).astype(np.int32))
     halo_sizes = np.array([len(h) for h in halos], dtype=np.int64)
     Hmax = max(int(halo_sizes.max(initial=0)), 1)
     halo = np.full((S, Hmax), n, dtype=np.int32)
+    halo_owner = np.full((S, Hmax), S, dtype=np.int32)
     for s, h in enumerate(halos):
         halo[s, : len(h)] = h
+        halo_owner[s, : len(h)] = shard_of[h]
 
-    # Border of shard s = its rows referenced by any other shard's halo.
-    borders = []
+    # Border of shard s = its local rows referenced by any other shard's
+    # halo, unique-sorted in local-row order.
     all_halo = np.concatenate(halos) if halos else np.zeros(0, dtype=np.int32)
+    owner_all = shard_of[all_halo] if len(all_halo) else np.zeros(0, dtype=np.int32)
+    borders = []
     for s in range(S):
-        lo, hi = int(bounds[s]), int(bounds[s + 1])
-        mine = np.unique(all_halo[(all_halo >= lo) & (all_halo < hi)])
-        borders.append((mine - lo).astype(np.int32))  # sorted local rows
+        mine = all_halo[owner_all == s]
+        borders.append(np.unique(local_of[mine]).astype(np.int32))
     border_sizes = np.array([len(b) for b in borders], dtype=np.int64)
     Bmax = max(int(border_sizes.max(initial=0)), 1)
     border = np.zeros((S, Bmax), dtype=np.int32)
@@ -186,23 +400,19 @@ def partition_graph(
         halo_src[s, : len(h)] = owner.astype(np.int64) * Bmax + pos
 
     # Per-shard padded neighbour tiles in extended-local coordinates
-    # ([own rows ; halo rows]), preserving CSR neighbour order so the
-    # per-row reduction matches CSRGraph.padded_neighbors bit-for-bit.
+    # ([own rows ; halo rows]), preserving the original CSR neighbour
+    # order per row so the per-row reduction matches
+    # CSRGraph.padded_neighbors bit-for-bit under any relabeling.
     idx = np.tile(np.arange(R, dtype=np.int32)[None, :, None], (S, 1, K))
     w = np.zeros((S, R, K), dtype=np.float64)
     for s in range(S):
-        lo, hi = int(bounds[s]), int(bounds[s + 1])
-        size = hi - lo
-        sl = slice(indptr[lo], indptr[hi])
-        cols = csr.indices[sl].astype(np.int64)
-        vals = csr.data[sl]
-        deg = np.diff(indptr[lo : hi + 1])
+        size = int(sizes[s])
+        cols, vals, deg, pos = shard_cols[s], shard_vals[s], shard_degs[s], shard_offs[s]
         rows_local = np.repeat(np.arange(size, dtype=np.int64), deg)
-        pos = np.arange(len(cols)) - np.repeat(indptr[lo:hi] - indptr[lo], deg)
         local_cols = np.where(
-            (cols >= lo) & (cols < hi),
-            cols - lo,
-            R + np.searchsorted(halos[s], cols.astype(np.int32)),
+            shard_of[cols] == s,
+            local_of[cols],
+            R + np.searchsorted(halos[s], cols),
         )
         idx[s, rows_local, pos] = local_cols.astype(np.int32)
         w[s, rows_local, pos] = vals
@@ -210,6 +420,8 @@ def partition_graph(
         csr=csr,
         num_shards=S,
         mode=mode,
+        relabel=relabel_mode,
+        order=order,
         bounds=bounds,
         owned=owned,
         sizes=sizes,
@@ -217,9 +429,61 @@ def partition_graph(
         local_of=local_of,
         halo=halo,
         halo_sizes=halo_sizes,
+        halo_owner=halo_owner,
         border=border,
         border_sizes=border_sizes,
         halo_src=halo_src,
         idx=idx,
         w=w,
     )
+
+
+def point_to_point_plan(
+    part: GraphPartition,
+) -> tuple[tuple[int, ...], tuple[np.ndarray, ...], tuple[np.ndarray, ...]]:
+    """Neighbour-shard exchange plan: one ``ppermute`` per ring offset.
+
+    Returns ``(offsets, sends, dsts)``. For each mesh-ring offset
+    ``d = offsets[k]`` (a distinct value of ``(reader - owner) mod S``
+    over cross-shard edges):
+
+    * ``sends[k]``: (S, P_d) int32 — the local rows shard ``t`` packs
+      into the buffer it ships to shard ``(t + d) mod S`` (padded with
+      row 0; padding is never referenced by the receiver);
+    * ``dsts[k]``: (S, P_d) int32 — the halo slot (position in
+      ``[0, Hmax)``) shard ``s`` writes each received buffer row to,
+      padded with the sentinel ``Hmax`` (dropped by the scatter).
+
+    Buffer slot ``j`` of the (t -> s) pair carries owner-local row
+    ``sends[k][t, j]`` and lands in halo slot ``dsts[k][s, j]`` — both
+    sides are built from the same traversal of shard ``s``'s halo list,
+    so the alignment is by construction. Total shipped rows per
+    super-tick are ``S * sum_d P_d``, vs ``S * (S-1) * Bmax`` for the
+    replicated all-gather pool — the ``method="auto"`` selection in
+    :func:`repro.core.mixing.sharded_mix_op` compares exactly these.
+    """
+    S, Hmax = part.halo.shape
+    send_by_off: dict[int, dict[int, np.ndarray]] = {}
+    dst_by_off: dict[int, dict[int, np.ndarray]] = {}
+    for s in range(S):
+        hs = int(part.halo_sizes[s])
+        ids = part.halo[s, :hs]
+        owners = part.shard_of[ids]
+        for t in np.unique(owners):
+            d = int((s - int(t)) % S)
+            sel = np.nonzero(owners == t)[0]
+            send_by_off.setdefault(d, {})[int(t)] = part.local_of[ids[sel]].astype(np.int32)
+            dst_by_off.setdefault(d, {})[s] = sel.astype(np.int32)
+    offsets = tuple(sorted(send_by_off))
+    sends, dsts = [], []
+    for d in offsets:
+        P = max(max(len(v) for v in send_by_off[d].values()), 1)
+        snd = np.zeros((S, P), dtype=np.int32)
+        dst = np.full((S, P), Hmax, dtype=np.int32)
+        for t, rows_t in send_by_off[d].items():
+            snd[t, : len(rows_t)] = rows_t
+        for s, slots in dst_by_off[d].items():
+            dst[s, : len(slots)] = slots
+        sends.append(snd)
+        dsts.append(dst)
+    return offsets, tuple(sends), tuple(dsts)

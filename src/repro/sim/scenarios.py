@@ -55,9 +55,11 @@ class ChurnConfig:
     rejoin_prob: float | np.ndarray = 0.2
 
     def leave_vector(self, n: int) -> np.ndarray:
+        """(n,) per-slot departure probabilities (scalars broadcast)."""
         return _prob_vector(self.leave_prob, n, "leave_prob")
 
     def rejoin_vector(self, n: int) -> np.ndarray:
+        """(n,) per-slot rejoin probabilities for departed agents."""
         return _prob_vector(self.rejoin_prob, n, "rejoin_prob")
 
 
@@ -75,6 +77,8 @@ class DelayConfig:
     edge_delays: int | np.ndarray = 1
 
     def delay_tiles(self, idx_shape: tuple[int, int]) -> np.ndarray:
+        """(n, K) per-edge delays in slots, aligned with the neighbour
+        tiles of shape ``idx_shape`` and clipped to ``[0, max_delay]``."""
         if self.max_delay < 0:
             raise ValueError("max_delay must be >= 0")
         d = np.broadcast_to(
@@ -92,6 +96,7 @@ class StragglerConfig:
     drop_prob: float | np.ndarray = 0.1
 
     def drop_vector(self, n: int) -> np.ndarray:
+        """(n,) per-slot missed-wake probabilities (scalars broadcast)."""
         return _prob_vector(self.drop_prob, n, "drop_prob")
 
 

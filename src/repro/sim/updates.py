@@ -16,9 +16,18 @@ agent *does* with its neighbour sum is delegated to a ``LocalUpdate``:
 All three reduce to the same contract: given the start-of-slot snapshot,
 the woken row indices (padded with the sentinel n), and their raw
 neighbour sums, return replacement rows plus an ``applied`` mask. The
-math lives next to its sequential twin (``eq4_rows`` in
-``coordinate_descent``, ``propagation_rows`` in ``model_propagation``) so
-the two execution paths cannot drift apart.
+math lives next to its sequential twin (``eq4_theta_rows_from`` in
+``coordinate_descent``, ``propagation_rows_from`` in
+``model_propagation``) so the two execution paths cannot drift apart.
+
+For the sharded engine, each update also exposes ``agent_constants`` —
+the pytree of per-agent arrays (datasets, theory constants, noise
+scales) its row step reads. The engine tiles those along the agent
+blocks and hands the row-gathered slice back through ``apply_rows``'s
+``consts`` argument, so the sharded super-tick never closes over a
+replicated (n, ...) array; ``consts=None`` (the single-device path)
+falls back to gathering from the replicated arrays, elementwise-equal
+by construction.
 """
 
 from __future__ import annotations
@@ -32,10 +41,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import privacy
-from repro.core.coordinate_descent import eq4_theta_rows
+from repro.core.coordinate_descent import (
+    eq4_agent_constants,
+    eq4_theta_rows,
+    eq4_theta_rows_from,
+)
 from repro.core.dp_cd import DPConfig, uniform_noise_plan
 from repro.core.mixing import MixOp, mix_op
-from repro.core.model_propagation import propagation_objective, propagation_rows
+from repro.core.model_propagation import (
+    propagation_objective,
+    propagation_rows,
+    propagation_rows_from,
+)
 from repro.core.objective import Objective
 
 
@@ -52,30 +69,58 @@ class LocalUpdate(Protocol):
 
     ``apply_rows`` is the same step for the sharded engine, which holds
     only its local Theta block: ``theta_rows`` is pre-gathered, ``rows``
-    stays *global* (the per-agent constants and data are indexed
-    globally), and the state pytree is this shard's slice, gathered and
-    scattered at the local indices ``srows`` with sentinel ``ssize``.
-    ``apply`` delegates to it with ``srows=rows, ssize=n``, so the two
+    stays *global* (sentinel n), and the state pytree is this shard's
+    slice, gathered and scattered at the local indices ``srows`` with
+    sentinel ``ssize``. ``consts``, when given, is the row-gathered
+    slice of :meth:`agent_constants` (each leaf (B, ...), row-aligned
+    with ``theta_rows``) — the shard-resident replacement for indexing
+    the replicated per-agent arrays with ``rows``. ``apply`` delegates
+    to it with ``srows=rows, ssize=n, consts=None``, so the two
     execution paths cannot drift apart.
     """
 
     @property
-    def n(self) -> int: ...
+    def n(self) -> int:
+        """Number of agents."""
+        ...
 
     @property
-    def p(self) -> int: ...
+    def p(self) -> int:
+        """Model dimension per agent."""
+        ...
 
     @property
-    def graph(self): ...
+    def graph(self):
+        """The collaboration graph (dense or CSR)."""
+        ...
 
     @property
-    def mix(self) -> MixOp: ...
+    def mix(self) -> MixOp:
+        """The neighbour-sum operator over :attr:`graph`."""
+        ...
 
-    def init_state(self): ...
+    def init_state(self):
+        """The initial update-state pytree (per-agent leaves, leading dim n)."""
+        ...
 
-    def apply(self, Theta, rows, valid, neigh, key, state): ...
+    def agent_constants(self):
+        """Per-agent constant arrays (leading dim n) the row step reads.
 
-    def apply_rows(self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None): ...
+        The sharded engine tiles this pytree into (S, R, ...) blocks so
+        dataset memory scales with the shard count; leaves keep their
+        original dtypes (consumers cast after gathering).
+        """
+        ...
+
+    def apply(self, Theta, rows, valid, neigh, key, state):
+        """One batched update against the global (n, p) snapshot."""
+        ...
+
+    def apply_rows(
+        self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None, consts=None
+    ):
+        """One batched update from pre-gathered rows (see class docstring)."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -86,31 +131,48 @@ class CDUpdate:
 
     @property
     def n(self) -> int:
+        """Number of agents."""
         return self.obj.n
 
     @property
     def p(self) -> int:
+        """Model dimension per agent."""
         return self.obj.p
 
     @property
     def graph(self):
+        """The collaboration graph of the objective."""
         return self.obj.graph
 
     @property
     def mix(self) -> MixOp:
+        """The objective's neighbour-sum operator."""
         return self.obj.mix
 
     def init_state(self):
+        """Stateless: the empty pytree."""
         return ()
 
+    def agent_constants(self):
+        """Eq. 4 constants + padded per-agent datasets (see ``eq4_agent_constants``)."""
+        return eq4_agent_constants(self.obj)
+
     def apply(self, Theta, rows, valid, neigh, key, state):
+        """Gather the woken rows from the global snapshot and update them."""
         return self.apply_rows(Theta[rows], rows, valid, neigh, key, state)
 
-    def apply_rows(self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None):
-        new_rows = eq4_theta_rows(self.obj, theta_rows, rows, neigh)
+    def apply_rows(
+        self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None, consts=None
+    ):
+        """Batched Eq. 4 step; ``consts`` selects the shard-resident path."""
+        if consts is None:
+            new_rows = eq4_theta_rows(self.obj, theta_rows, rows, neigh)
+        else:
+            new_rows = eq4_theta_rows_from(self.obj, theta_rows, neigh, consts)
         return new_rows, valid, state
 
     def objective(self, Theta) -> float:
+        """Q(Theta) of Eq. 2 (used by ``record_every``)."""
         return float(self.obj.value(Theta))
 
 
@@ -137,6 +199,7 @@ class DPCDUpdate:
 
     @classmethod
     def plan(cls, obj: Objective, cfg: DPConfig, planned_Ti: int) -> "DPCDUpdate":
+        """Plan the per-agent uniform budget split for ``planned_Ti`` wake-ups."""
         if cfg.schedule != "uniform":
             raise NotImplementedError(
                 "the batched engine supports the uniform budget split only; "
@@ -147,27 +210,43 @@ class DPCDUpdate:
 
     @property
     def n(self) -> int:
+        """Number of agents."""
         return self.obj.n
 
     @property
     def p(self) -> int:
+        """Model dimension per agent."""
         return self.obj.p
 
     @property
     def graph(self):
+        """The collaboration graph of the objective."""
         return self.obj.graph
 
     @property
     def mix(self) -> MixOp:
+        """The objective's neighbour-sum operator."""
         return self.obj.mix
 
     def init_state(self):
+        """(n,) int32 count of applied private updates per agent."""
         return jnp.zeros(self.n, dtype=jnp.int32)
 
-    def apply(self, Theta, rows, valid, neigh, key, state):
-        return self.apply_rows(Theta[jnp.minimum(rows, self.n - 1)], rows, valid, neigh, key, state)
+    def agent_constants(self):
+        """Eq. 4 constants + the (n,) per-agent noise scales."""
+        return {**eq4_agent_constants(self.obj), "scales": self.scales}
 
-    def apply_rows(self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None):
+    def apply(self, Theta, rows, valid, neigh, key, state):
+        """Gather the woken rows (sentinel-clamped) and privately update them."""
+        return self.apply_rows(
+            Theta[jnp.minimum(rows, self.n - 1)], rows, valid, neigh, key, state
+        )
+
+    def apply_rows(
+        self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None, consts=None
+    ):
+        """Batched Eq. 6 step with budget stopping; ``consts`` selects the
+        shard-resident path (noise scales included in the pytree)."""
         n = self.n
         if srows is None:
             srows, ssize = rows, n
@@ -178,8 +257,13 @@ class DPCDUpdate:
             draws = jax.random.normal(key, shape=neigh.shape, dtype=dt)
         else:
             draws = jax.random.laplace(key, shape=neigh.shape, dtype=dt)
-        noise = draws * jnp.asarray(self.scales, dt)[jnp.minimum(rows, n - 1)][:, None]
-        new_rows = eq4_theta_rows(self.obj, theta_rows, rows, neigh, grad_noise=noise)
+        if consts is None:
+            scales_rows = jnp.asarray(self.scales, dt)[jnp.minimum(rows, n - 1)]
+            noise = draws * scales_rows[:, None]
+            new_rows = eq4_theta_rows(self.obj, theta_rows, rows, neigh, grad_noise=noise)
+        else:
+            noise = draws * jnp.asarray(consts["scales"], dt)[:, None]
+            new_rows = eq4_theta_rows_from(self.obj, theta_rows, neigh, consts, grad_noise=noise)
         state = state.at[jnp.where(applied, srows, ssize)].add(1, mode="drop")
         return new_rows, applied, state
 
@@ -190,6 +274,7 @@ class DPCDUpdate:
         )
 
     def objective(self, Theta) -> float:
+        """Q(Theta) of Eq. 2 (used by ``record_every``)."""
         return float(self.obj.value(Theta))
 
 
@@ -205,31 +290,48 @@ class PropagationUpdate:
 
     @cached_property
     def mix(self) -> MixOp:
+        """The neighbour-sum operator over :attr:`graph` (built lazily)."""
         return mix_op(self.graph, mode=self.mix_mode)
 
     @property
     def n(self) -> int:
+        """Number of agents."""
         return self.graph.n
 
     @property
     def p(self) -> int:
+        """Model dimension per agent."""
         return self.theta_loc.shape[1]
 
     def init_state(self):
+        """Stateless: the empty pytree."""
         return ()
 
+    def agent_constants(self):
+        """Degrees, confidences, and the (n, p) local models Eq. 16 reads."""
+        return {"deg": self.graph.degrees, "conf": self.confidences, "loc": self.theta_loc}
+
     def apply(self, Theta, rows, valid, neigh, key, state):
+        """Gather the woken rows from the global snapshot and update them."""
         return self.apply_rows(Theta[rows], rows, valid, neigh, key, state)
 
-    def apply_rows(self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None):
-        # The Eq. 16 exact block minimizer reads only the neighbour sum and
-        # the (globally indexed) local models — theta_rows is unused.
-        new_rows = propagation_rows(
-            self.graph.degrees, self.theta_loc, self.mu, self.confidences, rows, neigh
-        )
+    def apply_rows(
+        self, theta_rows, rows, valid, neigh, key, state, srows=None, ssize=None, consts=None
+    ):
+        """Batched Eq. 16 exact block minimizer; ``theta_rows`` is unused —
+        the update reads only the neighbour sum and the local models."""
+        if consts is None:
+            new_rows = propagation_rows(
+                self.graph.degrees, self.theta_loc, self.mu, self.confidences, rows, neigh
+            )
+        else:
+            new_rows = propagation_rows_from(
+                self.mu, consts["deg"], consts["conf"], consts["loc"], neigh
+            )
         return new_rows, valid, state
 
     def objective(self, Theta) -> float:
+        """Q_MP of Eq. 15 (used by ``record_every``)."""
         value, _ = propagation_objective(
             self.graph, np.asarray(self.theta_loc), self.mu, np.asarray(self.confidences)
         )

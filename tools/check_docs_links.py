@@ -1,0 +1,65 @@
+"""Check that relative markdown links in README.md and docs/ resolve.
+
+Scans ``[text](target)`` links (and reference-style ``[text]: target``
+definitions), skips absolute URLs / anchors / mailto, resolves each
+target against the file it appears in, and fails if any target is
+missing on disk. Module/function paths written as ``path#anchor`` are
+checked for the file part only. Run from the repo root:
+
+    python tools/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REFDEF = re.compile(r"^\[[^\]]+\]:\s*(\S+)", re.MULTILINE)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    """Return human-readable errors for the dangling links in ``md``."""
+    text = md.read_text(encoding="utf-8")
+    errors = []
+    for match in list(LINK.finditer(text)) + list(REFDEF.finditer(text)):
+        target = match.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        # Repo-relative badge-style links like ../../actions/... point at
+        # the GitHub UI, not the tree; skip anything that escapes the repo.
+        resolved = (md.parent / path_part).resolve()
+        try:
+            resolved.relative_to(root)
+        except ValueError:
+            continue
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(root)}: dangling link -> {target}")
+    return errors
+
+
+def main() -> int:
+    """Check every tracked markdown file; return a process exit code."""
+    root = Path(__file__).resolve().parent.parent
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    errors = []
+    checked = 0
+    for md in files:
+        if not md.exists():
+            errors.append(f"missing expected doc file: {md.relative_to(root)}")
+            continue
+        checked += 1
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {checked} files, {len(errors)} dangling links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
