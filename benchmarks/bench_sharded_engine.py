@@ -47,7 +47,7 @@ def exchange_stats(graph, shards: int, p: int, partition_mode: str = "degree"):
     shapes ship them.
     """
     from repro.sim import partition_graph
-    from repro.core.mixing import sharded_mix_op
+    from repro.core.mixing import ExchangeSpec, sharded_mix_op
 
     rows, parts = [], {}
     for label, relabel in (("norelabel", None), ("rcm", "rcm")):
@@ -62,11 +62,16 @@ def exchange_stats(graph, shards: int, p: int, partition_mode: str = "degree"):
              f"partition_build={build_s:.1f}s")
         )
         for method in ("all_gather", "p2p"):
-            nbytes = part.exchange_rows(method) * p * 4
-            rows.append(
-                (f"sharded_exchange_bytes_{label}_{method}", float(nbytes),
-                 f"rows={part.exchange_rows(method)} p={p} f32 bytes/super-tick")
-            )
+            xrows = part.exchange_rows(method)
+            for dtype in ("f32", "bf16"):
+                spec = ExchangeSpec(method=method, dtype=dtype)
+                nbytes = xrows * spec.payload_bytes_per_row(p)
+                suffix = "" if dtype == "f32" else f"_{dtype}"
+                rows.append(
+                    (f"sharded_exchange_bytes_{label}_{method}{suffix}",
+                     float(nbytes),
+                     f"rows={xrows} p={p} {dtype} bytes/super-tick")
+                )
     return rows, parts
 
 
@@ -82,12 +87,22 @@ def run(
     partition_mode: str = "degree",
     relabel: str | None = "rcm",
     exchange: str = "auto",
+    fused="auto",
+    roofline: bool = True,
     verbose: bool = True,
 ):
-    """Time the sharded engine at scale and report the comm sweep rows."""
+    """Time the sharded engine at scale and report the comm sweep rows.
+
+    ``exchange`` takes an :class:`repro.core.mixing.ExchangeSpec` or a
+    spec string (``"auto"``, ``"p2p:bf16"``, ``"p2p:int8:ef"`` ...);
+    ``fused`` is the EngineConfig knob (``"auto"`` engages the fused
+    super-tick kernel on TPU only — forcing ``True`` on a CPU host runs
+    the kernel in interpret mode, which is not a perf configuration).
+    """
     import jax
 
     from benchmarks.bench_sparse_scale import _make_problem
+    from repro.core.mixing import ExchangeSpec
     from repro.sim import CDUpdate, ChurnConfig, Scenario, ShardedAsyncEngine
 
     if len(jax.devices()) < shards:
@@ -110,17 +125,19 @@ def run(
     scenario = Scenario(
         churn=ChurnConfig(leave_prob=0.01, rejoin_prob=0.2) if churn else None
     )
+    spec = exchange if isinstance(exchange, ExchangeSpec) else ExchangeSpec.from_string(exchange)
     t0 = time.time()
     engine = ShardedAsyncEngine(
         CDUpdate(obj),
         num_shards=shards,
         partition_mode=partition_mode,
         relabel=relabel,
-        exchange=exchange,
+        exchange=spec,
         partition=parts.get(relabel),
         slot_wakes=slot_wakes,
         scenario=scenario,
         seed=seed,
+        fused=fused,
     )
     part_s = time.time() - t0
     part = engine.part
@@ -154,7 +171,8 @@ def run(
     assert steady_applied > 0
     ticks_per_s = steady_applied / max(steady_s, 1e-9)
     deg = np.diff(graph.indptr)
-    xbytes = part.exchange_rows(engine.exchange_method) * p * 4
+    wire = engine.exchange_spec
+    xbytes = part.exchange_rows(engine.exchange_method) * wire.payload_bytes_per_row(p)
     rows = [
         ("sharded_graph_build", build_s * 1e6 / max(n, 1),
          f"n={n} deg~{deg.mean():.1f} us/agent"),
@@ -165,11 +183,24 @@ def run(
          "times are on the halo_frac rows)"),
         ("sharded_super_tick", steady_s * 1e6 / slots,
          f"n={n} S={shards} B={engine.batch_size} churn={int(churn)} "
-         f"exchange={engine.exchange_method} xbytes={xbytes} us/slot"),
+         f"exchange={engine.exchange_method}:{wire.dtype}"
+         f"{':ef' if wire.error_feedback else ''} fused={int(engine.fused)} "
+         f"xbytes={xbytes} us/slot"),
         ("sharded_equiv_ticks_per_s", ticks_per_s,
          f"{applied} wakes applied, {int(np.asarray(state.dropped).sum())} dropped, "
          f"compile {compile_s:.1f}s"),
     ] + stats_rows
+    if roofline:
+        # Place the compiled super-tick on the bandwidth roofline (the
+        # program advance() just ran, fused kernel and compressed halos
+        # included) and report the measured-vs-bound gap.
+        from repro.roofline import supertick_report
+
+        rows += supertick_report(
+            engine, state=state, steps=slots,
+            measured_s_per_tick=steady_s / slots,
+            prefix="sharded_roofline_supertick",
+        )
     if verbose:
         for name, v, note in rows:
             print(f"{name},{v:.4g},{note}")
@@ -188,7 +219,11 @@ def main(argv=None):
     ap.add_argument("--mode", default="degree", choices=["degree", "contiguous"])
     ap.add_argument("--relabel", default="rcm", choices=["rcm", "none"])
     ap.add_argument("--exchange", default="auto",
-                    choices=["auto", "all_gather", "p2p"])
+                    help="ExchangeSpec string: method[:dtype[:ef]] with method "
+                         "auto|all_gather|p2p and dtype f32|bf16|int8 "
+                         "(e.g. p2p:bf16, p2p:int8:ef)")
+    ap.add_argument("--fused", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--no-roofline", action="store_true")
     args = ap.parse_args(argv)
     if "jax" not in sys.modules and "host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""
@@ -208,6 +243,8 @@ def main(argv=None):
         partition_mode=args.mode,
         relabel=None if args.relabel == "none" else args.relabel,
         exchange=args.exchange,
+        fused={"auto": "auto", "on": True, "off": False}[args.fused],
+        roofline=not args.no_roofline,
     )
 
 

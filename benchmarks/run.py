@@ -105,6 +105,9 @@ def main(argv=None) -> None:
     if args.only in (None, "kernels"):
         t0 = time.time()
         ks = bench_kernels.run()
+        # Per-kernel rows (fused_row_update etc.) join the summary alongside
+        # the aggregate, so kernel-level perf has its own trajectory.
+        rows.extend(ks)
         record("kernels", t0, f"{len(ks)} kernels timed")
 
     if args.only in (None, "sparse_scale"):

@@ -16,13 +16,14 @@ import numpy as np
 
 from repro.core import AgentData, DPConfig, make_objective, random_geometric_graph
 from repro.sim import (
-    AsyncEngine,
     CDUpdate,
     ChurnConfig,
     DelayConfig,
     DPCDUpdate,
+    EngineConfig,
     Scenario,
     StragglerConfig,
+    make_engine,
 )
 
 
@@ -39,8 +40,10 @@ def main():
 
     print(f"n={n} agents, avg degree ~{np.diff(graph.indptr).mean():.1f}")
 
-    # 1. Ideal conditions: pure thinned Poisson clocks.
-    eng = AsyncEngine(CDUpdate(obj), slot_wakes=512.0, seed=1)
+    # 1. Ideal conditions: pure thinned Poisson clocks. One EngineConfig
+    # carries the shared knobs; scenario variants are replace() overlays.
+    cfg = EngineConfig(slot_wakes=512.0, seed=1)
+    eng = make_engine(CDUpdate(obj), cfg)
     res = eng.run(Theta0, slots=60, record_every=20)
     print("\n[ideal]      Q:", " -> ".join(f"{q:.1f}" for q in res.objective))
     print(f"             {res.wakes_applied} wakes over {res.slots} super-ticks")
@@ -51,7 +54,7 @@ def main():
         delay=DelayConfig(max_delay=2, edge_delays=1),
         straggler=StragglerConfig(drop_prob=0.1),
     )
-    eng = AsyncEngine(CDUpdate(obj), slot_wakes=512.0, seed=1, scenario=scenario)
+    eng = make_engine(CDUpdate(obj), cfg, scenario=scenario)
     res = eng.run(Theta0, slots=60, record_every=20)
     print("\n[hostile]    Q:", " -> ".join(f"{q:.1f}" for q in res.objective))
     print(
@@ -67,7 +70,7 @@ def main():
         graph, data, "quadratic", mu=0.5, mix_mode="sparse", clip=0.5
     )
     upd = DPCDUpdate.plan(clipped, DPConfig(eps_bar=1.0), planned_Ti=4)
-    eng = AsyncEngine(upd, slot_wakes=512.0, seed=1)
+    eng = make_engine(upd, cfg)
     res = eng.run(Theta0, slots=60, record_every=20)
     eps = upd.eps_spent(res.update_state)
     counts = np.asarray(res.update_state)

@@ -22,6 +22,7 @@ Pass ``mode="dense"``/``"sparse"`` to pin a representation explicitly
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -141,6 +142,97 @@ class MixOp:
         return 0.25 * jnp.sum(jnp.asarray(self.vals, Theta.dtype) * d2)
 
 
+_EXCHANGE_METHODS = ("all_gather", "p2p", "auto")
+_EXCHANGE_DTYPES = ("f32", "bf16", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeSpec:
+    """Typed halo-exchange configuration for the sharded engines.
+
+    Replaces the bare ``method`` strings: the wire format now has three
+    independent axes —
+
+    * ``method``: which collective ships the halo rows (``"all_gather"``
+      replicated border pool, ``"p2p"`` per-ring-offset ``ppermute``, or
+      ``"auto"`` to pick by the partition's measured cut);
+    * ``dtype``: the payload element type. ``"f32"`` ships full-precision
+      rows (bit-exact, the PR-4 behaviour); ``"bf16"`` halves the bytes
+      per row; ``"int8"`` quarters them, shipping one f32 scale per row
+      (``max|row| / 127`` symmetric quantization);
+    * ``error_feedback``: carry a per-border-row residual accumulator
+      (CHOCO-SGD style) in :class:`repro.sim.ShardedSimState` so the
+      quantization error is re-injected into the next slot's payload
+      instead of biasing the gossip fixed point.
+
+    Old-style strings (``exchange="p2p"``) still work everywhere a spec
+    is accepted, via :meth:`coerce` + ``DeprecationWarning``. The
+    documented string form for CLIs is :meth:`from_string`
+    (``"p2p:bf16:ef"``), which does not warn.
+    """
+
+    method: str = "auto"
+    dtype: str = "f32"
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if self.method not in _EXCHANGE_METHODS:
+            raise ValueError(
+                f"unknown exchange method {self.method!r} (use one of {_EXCHANGE_METHODS})"
+            )
+        if self.dtype not in _EXCHANGE_DTYPES:
+            raise ValueError(
+                f"unknown exchange dtype {self.dtype!r} (use one of {_EXCHANGE_DTYPES})"
+            )
+        if self.error_feedback and self.dtype == "f32":
+            raise ValueError(
+                "error_feedback has no effect on the lossless f32 wire format; "
+                "pick dtype='bf16' or 'int8'"
+            )
+
+    @classmethod
+    def from_string(cls, spec: str) -> "ExchangeSpec":
+        """Parse the CLI form ``method[:dtype[:ef]]``, e.g. ``"p2p:bf16:ef"``."""
+        parts = [s for s in str(spec).split(":") if s]
+        if not parts:
+            raise ValueError(f"empty exchange spec {spec!r}")
+        method, rest = parts[0], parts[1:]
+        ef = "ef" in rest
+        dtypes = [r for r in rest if r != "ef"]
+        if len(dtypes) > 1 or any(r not in _EXCHANGE_DTYPES for r in dtypes):
+            raise ValueError(f"bad exchange spec {spec!r} (want method[:dtype[:ef]])")
+        return cls(method=method, dtype=dtypes[0] if dtypes else "f32", error_feedback=ef)
+
+    @classmethod
+    def coerce(cls, value) -> "ExchangeSpec":
+        """Accept an ExchangeSpec, None (defaults), or a deprecated string."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            warnings.warn(
+                f"passing exchange={value!r} as a bare string is deprecated; "
+                f"use ExchangeSpec (e.g. ExchangeSpec.from_string({value!r}))",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            return cls.from_string(value)
+        raise TypeError(f"exchange must be an ExchangeSpec or string, got {type(value)!r}")
+
+    def payload_bytes_per_row(self, p: int) -> int:
+        """Wire bytes per exchanged row of width p (int8 adds its f32 scale)."""
+        if self.dtype == "f32":
+            return 4 * p
+        if self.dtype == "bf16":
+            return 2 * p
+        return p + 4
+
+    def needs_error_feedback_state(self) -> bool:
+        """Whether the engine must thread a (Bmax, p) accumulator per shard."""
+        return self.error_feedback and self.dtype != "f32"
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class ShardedMixOp:
     """Shard-local neighbour sums with halo exchange over an agent partition.
@@ -170,6 +262,18 @@ class ShardedMixOp:
     :func:`sharded_mix_op` picks whichever ships fewer rows per
     super-tick for the measured cut.
 
+    **Compressed payloads** (``dtype="bf16"`` / ``"int8"`` from the
+    :class:`ExchangeSpec`): each shard quantizes its border rows *once*
+    per slot — every reader receives the same dequantized copy, whichever
+    collective ships it — and the wire carries the narrow payload (int8
+    adds one f32 scale per row, ``max|row| / 127``). With
+    ``error_feedback`` the shard keeps a (Bmax, p) residual accumulator
+    ``e``: it quantizes ``v = border + e`` and stores ``e' = v - dq(v)``,
+    so the quantization error re-enters the next slot's payload instead
+    of accumulating into a fixed-point bias. The accumulator is engine
+    state (:class:`repro.sim.ShardedSimState` ``ef`` leaf), threaded
+    through :meth:`exchange_halo`.
+
     The stacked (S, ...) plan arrays (``exchange_inputs``) and tiles are
     *inputs* to the shard_map'd caller (sliced per shard by
     ``in_specs``), never closed over — a closure would replicate the
@@ -188,6 +292,9 @@ class ShardedMixOp:
     p2p_offsets: tuple[int, ...] = ()  # static ring offsets, one ppermute each
     p2p_send: tuple[np.ndarray, ...] = ()  # per offset: (S, P_d) local rows to ship
     p2p_dst: tuple[np.ndarray, ...] = ()  # per offset: (S, P_d) halo slots, sentinel Hmax
+    p2p_bpos: tuple[np.ndarray, ...] = ()  # per offset: (S, P_d) border-pool positions of sends
+    dtype: str = "f32"  # wire format: "f32" | "bf16" | "int8"
+    error_feedback: bool = False  # thread a (Bmax, p) residual accumulator
     axis: str = "shards"
 
     @property
@@ -203,30 +310,84 @@ class ShardedMixOp:
         :meth:`exchange_halo`.
         """
         if self.method == "p2p":
+            if self.dtype != "f32":
+                # Compressed p2p quantizes the border pool once, then ships
+                # per-offset *slices* of it: sends are re-addressed as
+                # border-pool positions and the border table rides along.
+                return {"border": self.border, "bpos": self.p2p_bpos, "dst": self.p2p_dst}
             return {"send": self.p2p_send, "dst": self.p2p_dst}
         return {"border": self.border, "halo_src": self.halo_src}
 
-    def exchange_halo(self, Theta_local, ex):
+    def init_error_feedback(self, p: int, dtype=jnp.float32):
+        """Zero (S, Bmax, p) residual accumulator (None when not threaded)."""
+        if not (self.error_feedback and self.dtype != "f32"):
+            return None
+        return jnp.zeros((self.num_shards, self.border.shape[1], p), dtype)
+
+    def _quantize(self, v):
+        """Quantize border rows v (Bmax, p) -> (payload dict, dequantized)."""
+        if self.dtype == "bf16":
+            q = v.astype(jnp.bfloat16)
+            return {"q": q}, q.astype(v.dtype)
+        # int8 with per-row symmetric scales: scale = max|row| / 127.
+        scale = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, jnp.asarray(1e-30, v.dtype))
+        q = jnp.clip(jnp.round(v / scale), -127.0, 127.0).astype(jnp.int8)
+        return {"q": q, "scale": scale}, q.astype(v.dtype) * scale
+
+    def exchange_halo(self, Theta_local, ex, ef=None):
         """Extend this shard's (R, p) block with its halo rows.
 
         Runs inside ``shard_map``. ``ex`` is this shard's slice of
-        :meth:`exchange_inputs` (leading S axis already consumed).
-        Returns the (R + Hmax, p) extended array the tiles index; halo
-        slots past this shard's real halo size are unreferenced by the
-        tiles (all_gather leaves pool rows there, p2p leaves zeros).
+        :meth:`exchange_inputs` (leading S axis already consumed); ``ef``
+        is this shard's (Bmax, p) error-feedback accumulator slice (None
+        when not threaded). Returns ``(Theta_ext, ef_new)``: the
+        (R + Hmax, p) extended array the tiles index — halo slots past
+        this shard's real halo size are unreferenced by the tiles — and
+        the updated accumulator (unchanged/None without error feedback).
         """
+        S = self.num_shards
+        if self.dtype == "f32":
+            if self.method == "p2p":
+                halo = jnp.zeros(
+                    (self.halo_width,) + Theta_local.shape[1:], Theta_local.dtype
+                )
+                for off, snd, dst in zip(self.p2p_offsets, ex["send"], ex["dst"]):
+                    perm = [(s, (s + off) % S) for s in range(S)]
+                    recv = jax.lax.ppermute(Theta_local[snd], self.axis, perm)  # (P_d, p)
+                    halo = halo.at[dst].set(recv, mode="drop")  # sentinel Hmax drops padding
+                return jnp.concatenate([Theta_local, halo], axis=0), ef
+            send = Theta_local[ex["border"]]  # (Bmax, p)
+            pool = jax.lax.all_gather(send, self.axis)  # (S, Bmax, p)
+            halo = pool.reshape((-1,) + pool.shape[2:])[ex["halo_src"]]  # (Hmax, p)
+            return jnp.concatenate([Theta_local, halo], axis=0), ef
+
+        # Compressed wire: quantize the border pool once per slot — every
+        # reader receives the same dequantized copy — and ship the narrow
+        # payload through whichever collective the plan chose.
+        v = Theta_local[ex["border"]]  # (Bmax, p)
+        if ef is not None:
+            v = v + ef.astype(v.dtype)
+        payload, dq = self._quantize(v)
+        ef_new = (v - dq) if ef is not None else ef
         if self.method == "p2p":
             halo = jnp.zeros((self.halo_width,) + Theta_local.shape[1:], Theta_local.dtype)
-            S = self.num_shards
-            for off, snd, dst in zip(self.p2p_offsets, ex["send"], ex["dst"]):
+            for off, bpos, dst in zip(self.p2p_offsets, ex["bpos"], ex["dst"]):
                 perm = [(s, (s + off) % S) for s in range(S)]
-                recv = jax.lax.ppermute(Theta_local[snd], self.axis, perm)  # (P_d, p)
-                halo = halo.at[dst].set(recv, mode="drop")  # sentinel Hmax drops padding
-            return jnp.concatenate([Theta_local, halo], axis=0)
-        send = Theta_local[ex["border"]]  # (Bmax, p)
-        pool = jax.lax.all_gather(send, self.axis)  # (S, Bmax, p)
-        halo = pool.reshape((-1,) + pool.shape[2:])[ex["halo_src"]]  # (Hmax, p)
-        return jnp.concatenate([Theta_local, halo], axis=0)
+                rq = jax.lax.ppermute(payload["q"][bpos], self.axis, perm)  # (P_d, p) narrow
+                recv = rq.astype(Theta_local.dtype)
+                if "scale" in payload:
+                    rs = jax.lax.ppermute(payload["scale"][bpos], self.axis, perm)
+                    recv = recv * rs.astype(Theta_local.dtype)
+                halo = halo.at[dst].set(recv, mode="drop")
+            return jnp.concatenate([Theta_local, halo], axis=0), ef_new
+        pool_q = jax.lax.all_gather(payload["q"], self.axis)  # (S, Bmax, p) narrow
+        flat = pool_q.reshape((-1,) + pool_q.shape[2:])[ex["halo_src"]]
+        halo = flat.astype(Theta_local.dtype)
+        if "scale" in payload:
+            pool_s = jax.lax.all_gather(payload["scale"], self.axis)
+            halo = halo * pool_s.reshape((-1, 1))[ex["halo_src"]].astype(Theta_local.dtype)
+        return jnp.concatenate([Theta_local, halo], axis=0), ef_new
 
     def gather_rows(self, Theta_ext, idx_s, w_s, rows):
         """Neighbour sums for local ``rows`` from the extended array.
@@ -241,28 +402,53 @@ class ShardedMixOp:
         return jnp.einsum("bk,bkp->bp", ww, Theta_ext[cols])
 
 
-def sharded_mix_op(partition, axis: str = "shards", method: str = "auto") -> ShardedMixOp:
+def sharded_mix_op(
+    partition, axis: str = "shards", exchange: "ExchangeSpec | str | None" = None
+) -> ShardedMixOp:
     """Build the halo-exchange operator for a :class:`GraphPartition`.
 
-    ``method``: ``"all_gather"`` (replicated border pool), ``"p2p"``
-    (neighbour-shard ``ppermute`` exchange), or ``"auto"`` — go
-    point-to-point only when it ships at most 3/4 of the all_gather
-    rows on this partition's measured cut
-    (``GraphPartition.exchange_rows``): a dense cut (high halo
-    fraction, e.g. unrelabeled shuffled labels) pays S-1 ppermutes for
-    barely less volume, so it falls back to the single fused
+    ``exchange`` is an :class:`ExchangeSpec` (None = defaults: auto
+    method, f32 wire). ``method="auto"`` goes point-to-point only when
+    it ships at most 3/4 of the all_gather rows on this partition's
+    measured cut (``GraphPartition.exchange_rows``): a dense cut (high
+    halo fraction, e.g. unrelabeled shuffled labels) pays S-1 ppermutes
+    for barely less volume, so it falls back to the single fused
     collective; a locality-relabeled cut ships a small fraction and
-    wins outright.
+    wins outright. Bare strings (``"p2p"``, ``"p2p:bf16"``) are accepted
+    as a deprecated shim.
     """
+    spec = ExchangeSpec.coerce(exchange)
+    method = spec.method
     if method == "auto":
         method = (
             "p2p"
             if 4 * partition.exchange_rows("p2p") <= 3 * partition.exchange_rows("all_gather")
             else "all_gather"
         )
-    if method not in ("all_gather", "p2p"):
-        raise ValueError(f"unknown exchange method {method!r}")
     offsets, sends, dsts = partition.p2p_plan if method == "p2p" else ((), (), ())
+    bpos: tuple[np.ndarray, ...] = ()
+    if method == "p2p" and spec.dtype != "f32":
+        # Re-address each offset's send rows as positions in the (sorted,
+        # unique) border list, so compressed sends slice the
+        # quantized-once border pool instead of Theta itself.
+        border = np.asarray(partition.border)
+        bsizes = np.asarray(partition.border_sizes)
+        bpos = tuple(
+            np.stack(
+                [
+                    # Only the valid prefix of the border row is sorted; the
+                    # zero padding past border_sizes[t] would break the
+                    # search. Padding send entries (row 0) may land on an
+                    # arbitrary position — the receiver's sentinel dst
+                    # drops them.
+                    np.searchsorted(
+                        border[t, : int(bsizes[t])], np.asarray(snd)[t]
+                    ).astype(np.int32)
+                    for t in range(partition.num_shards)
+                ]
+            )
+            for snd in sends
+        )
     return ShardedMixOp(
         n=partition.n,
         num_shards=partition.num_shards,
@@ -275,6 +461,9 @@ def sharded_mix_op(partition, axis: str = "shards", method: str = "auto") -> Sha
         p2p_offsets=offsets,
         p2p_send=sends,
         p2p_dst=dsts,
+        p2p_bpos=bpos,
+        dtype=spec.dtype,
+        error_feedback=spec.needs_error_feedback_state(),
         axis=axis,
     )
 

@@ -1,3 +1,15 @@
 from repro.roofline.analysis import analyze_compiled, collective_bytes, roofline_terms
+from repro.roofline.supertick import (
+    model_flops_per_supertick,
+    supertick_report,
+    supertick_roofline,
+)
 
-__all__ = ["analyze_compiled", "collective_bytes", "roofline_terms"]
+__all__ = [
+    "analyze_compiled",
+    "collective_bytes",
+    "model_flops_per_supertick",
+    "roofline_terms",
+    "supertick_report",
+    "supertick_roofline",
+]

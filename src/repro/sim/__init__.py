@@ -12,6 +12,7 @@ the module map and ``docs/DEVIATIONS.md`` for the consolidated ledger of
 recorded deviations from pure Poisson semantics.
 """
 
+from repro.core.mixing import ExchangeSpec
 from repro.sim.clocks import (
     default_batch_size,
     expected_wakes,
@@ -19,6 +20,7 @@ from repro.sim.clocks import (
     slot_duration,
     wake_probs,
 )
+from repro.sim.config import EngineConfig, make_engine
 from repro.sim.engine import (
     AsyncEngine,
     ShardedAsyncEngine,
@@ -28,6 +30,7 @@ from repro.sim.engine import (
 )
 from repro.sim.partition import (
     GraphPartition,
+    hilbert_order,
     partition_graph,
     point_to_point_plan,
     rcm_order,
@@ -36,25 +39,37 @@ from repro.sim.partition import (
 from repro.sim.scenarios import ChurnConfig, DelayConfig, Scenario, StragglerConfig
 from repro.sim.updates import CDUpdate, DPCDUpdate, LocalUpdate, PropagationUpdate
 
+# Curated public surface: engines + their config, the update rules, the
+# scenario bundles, partitioning, and the clock helpers. Everything else
+# in the submodules is implementation detail.
 __all__ = [
+    # engines and configuration
     "AsyncEngine",
-    "GraphPartition",
+    "EngineConfig",
+    "ExchangeSpec",
     "ShardedAsyncEngine",
     "ShardedSimState",
+    "SimResult",
+    "SimState",
+    "make_engine",
+    # update rules
+    "CDUpdate",
+    "DPCDUpdate",
+    "LocalUpdate",
+    "PropagationUpdate",
+    # scenarios
+    "ChurnConfig",
+    "DelayConfig",
+    "Scenario",
+    "StragglerConfig",
+    # partitioning and relabels
+    "GraphPartition",
+    "hilbert_order",
     "partition_graph",
     "point_to_point_plan",
     "rcm_order",
     "sfc_order",
-    "CDUpdate",
-    "ChurnConfig",
-    "DelayConfig",
-    "DPCDUpdate",
-    "LocalUpdate",
-    "PropagationUpdate",
-    "Scenario",
-    "SimResult",
-    "SimState",
-    "StragglerConfig",
+    # clock helpers
     "default_batch_size",
     "expected_wakes",
     "normalize_rates",

@@ -52,12 +52,40 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import as_csr, neighbor_counts
-from repro.core.mixing import sharded_mix_op
+from repro.core.mixing import kernel_max_n, sharded_mix_op
 from repro.core.spmd_compat import shard_map
 from repro.sim import clocks
+from repro.sim.config import EngineConfig, resolve_config
 from repro.sim.partition import partition_graph
 from repro.sim.scenarios import Scenario
 from repro.sim.updates import LocalUpdate
+
+
+def _resolve_fused(update, fused, slab_rows: int, dtype, has_delay: bool) -> bool:
+    """Resolve the tri-state ``fused`` knob against what the kernel serves.
+
+    ``"auto"`` engages only where the Pallas kernel is the right tool
+    (same gate family as :meth:`repro.core.mixing.MixOp._kernel_auto`):
+    compiled TPU lowering, f32 models, an update that implements the
+    fused row math (quadratic loss), no per-edge delays, and a slab that
+    fits VMEM (``REPRO_KERNEL_MAX_N``). ``True`` forces the kernel
+    (interpreted off-TPU — tests and parity checks); ``False`` keeps the
+    unfused ops.
+    """
+    supported = bool(getattr(update, "fused_supported", False)) and not has_delay
+    if fused == "auto":
+        return (
+            supported
+            and jax.default_backend() == "tpu"
+            and jnp.dtype(dtype) == jnp.dtype(jnp.float32)
+            and slab_rows <= kernel_max_n()
+        )
+    if fused:
+        if not supported:
+            reason = "a delay scenario" if has_delay else type(update).__name__
+            raise ValueError(f"fused=True but the fused path does not serve {reason}")
+        return True
+    return False
 
 
 class SimState(NamedTuple):
@@ -121,49 +149,35 @@ def _drive_slots(state, slots: int, stride: int, advance, on_record=None):
 class AsyncEngine:
     """Batched event-driven driver for any :class:`LocalUpdate`.
 
-    Parameters
-    ----------
-    update: the local rule (CD / DP-CD / propagation).
-    slot_wakes: expected wake-ups per super-tick; sets the slot duration
-        tau = slot_wakes / sum(rates). Larger = faster wall-clock, more
-        within-slot staleness.
-    rates: per-agent Poisson rates (default 1.0 — the paper's model);
-        heterogeneous rates model fast/slow device classes.
-    batch_size: static woken-rows batch B (default mean + 6 sigma).
-    scenario: churn / delay / straggler bundle (default: none).
-    seed: engine PRNG seed; every run is a pure function of it.
-    dtype: model dtype (f32 default; f64 for theory-grade parity checks).
-    steps_per_chunk: super-ticks per jitted ``lax.scan`` chunk.
+    Configured by :class:`repro.sim.EngineConfig` (``config=...``); the
+    historical keyword arguments (``slot_wakes``, ``rates``,
+    ``batch_size``, ``scenario``, ``seed``, ``dtype``,
+    ``steps_per_chunk``, ``fused``) still work as overrides merged into
+    the config — see the ``EngineConfig`` docstring for what each knob
+    means. With ``fused`` on (``"auto"`` engages it on TPU for f32
+    quadratic-loss updates at on-chip n), the woken-row hot path runs as
+    one ``fused_row_update`` Pallas launch instead of four XLA ops.
     """
 
-    def __init__(
-        self,
-        update: LocalUpdate,
-        *,
-        slot_wakes: float = 64.0,
-        rates=None,
-        batch_size: int | None = None,
-        scenario: Scenario | None = None,
-        seed: int = 0,
-        dtype=jnp.float32,
-        steps_per_chunk: int = 16,
-    ):
+    def __init__(self, update: LocalUpdate, *, config: EngineConfig | None = None, **kw):
+        cfg = resolve_config(config, kw)
+        self.config = cfg
         self.update = update
         self.n, self.p = update.n, update.p
-        self.dtype = dtype
-        self._seed = int(seed)
-        self.steps_per_chunk = int(steps_per_chunk)
-        self.rates = clocks.normalize_rates(rates, self.n)
-        self.tau = clocks.slot_duration(self.rates, slot_wakes)
+        self.dtype = cfg.dtype
+        self._seed = int(cfg.seed)
+        self.steps_per_chunk = int(cfg.steps_per_chunk)
+        self.rates = clocks.normalize_rates(cfg.rates, self.n)
+        self.tau = clocks.slot_duration(self.rates, cfg.slot_wakes)
         self.wake_probs = clocks.wake_probs(self.rates, self.tau)
         self.batch_size = (
-            int(batch_size)
-            if batch_size is not None
+            int(cfg.batch_size)
+            if cfg.batch_size is not None
             else clocks.default_batch_size(self.rates, self.tau)
         )
         if not (0 < self.batch_size <= self.n):
             raise ValueError("batch_size must lie in (0, n]")
-        self.scenario = scenario or Scenario()
+        self.scenario = cfg.scenario or Scenario()
 
         self._deg_counts = np.asarray(neighbor_counts(update.graph), dtype=np.float32)
         churn = self.scenario.churn
@@ -186,6 +200,19 @@ class AsyncEngine:
             self._delays = delay.delay_tiles(self._idx.shape)
         else:
             self._idx = self._w = self._delays = None
+
+        self.fused = _resolve_fused(update, cfg.fused, self.n, self.dtype, delay is not None)
+        if self.fused:
+            # The fused kernel consumes padded (n, K) neighbour tables
+            # whatever the MixOp backend (same tile build as the delay
+            # path above — dense graphs go through the CSR form).
+            mix = update.mix
+            if getattr(mix, "kind", None) == "sparse":
+                self._fidx, self._fw = np.asarray(mix.idx), np.asarray(mix.w)
+            else:
+                self._fidx, self._fw = as_csr(update.graph).padded_neighbors()
+        else:
+            self._fidx = self._fw = None
 
         self._chunk = jax.jit(self._chunk_impl, static_argnums=1)
         self._forced = jax.jit(self._slot_forced)
@@ -246,24 +273,35 @@ class AsyncEngine:
         dropped = total - valid.sum().astype(jnp.int32)
 
         Theta = state.Theta
-        if self._delays is not None:
-            hist = state.hist.at[state.ptr % self.depth].set(Theta)
-            safe = jnp.minimum(woken, n - 1)
-            cols = jnp.asarray(self._idx)[safe]  # (B, K)
-            w = jnp.asarray(self._w, Theta.dtype)[safe]  # (B, K)
-            dly = jnp.asarray(self._delays)[safe]  # (B, K)
-            slots = jnp.mod(state.ptr - dly, self.depth)
-            vals = hist[slots, cols]  # (B, K, p)
-            neigh = jnp.einsum("bk,bkp->bp", w, vals)
-        else:
+        if self.fused and self._delays is None:
+            # One Pallas launch: gather + mix + Eq. 4/6 + drop-mode scatter.
             hist = state.hist
-            neigh = self.update.mix.gather_rows(Theta, woken)
+            safe = jnp.minimum(woken, n - 1)
+            cols = jnp.asarray(self._fidx)[safe]  # (B, K)
+            ww = jnp.asarray(self._fw, jnp.float32)[safe]  # (B, K)
+            new_slab, applied, ustate = self.update.apply_fused(
+                Theta, woken, valid, k_upd, state.ustate, cols, ww
+            )
+            Theta = new_slab.astype(Theta.dtype)
+        else:
+            if self._delays is not None:
+                hist = state.hist.at[state.ptr % self.depth].set(Theta)
+                safe = jnp.minimum(woken, n - 1)
+                cols = jnp.asarray(self._idx)[safe]  # (B, K)
+                w = jnp.asarray(self._w, Theta.dtype)[safe]  # (B, K)
+                dly = jnp.asarray(self._delays)[safe]  # (B, K)
+                slots = jnp.mod(state.ptr - dly, self.depth)
+                vals = hist[slots, cols]  # (B, K, p)
+                neigh = jnp.einsum("bk,bkp->bp", w, vals)
+            else:
+                hist = state.hist
+                neigh = self.update.mix.gather_rows(Theta, woken)
 
-        new_rows, applied, ustate = self.update.apply(
-            Theta, woken, valid, neigh, k_upd, state.ustate
-        )
-        tgt = jnp.where(applied, woken, n)
-        Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
+            new_rows, applied, ustate = self.update.apply(
+                Theta, woken, valid, neigh, k_upd, state.ustate
+            )
+            tgt = jnp.where(applied, woken, n)
+            Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
 
         deg = jnp.asarray(self._deg_counts)[jnp.minimum(woken, n - 1)]
         messages = state.messages + jnp.sum(jnp.where(applied, deg, 0.0))
@@ -353,6 +391,9 @@ class ShardedSimState(NamedTuple):
     dropped: jnp.ndarray  # (S,) int32
     messages: jnp.ndarray  # (S,) f32
     ptr: jnp.ndarray  # (S,) int32 slot counter (identical across shards)
+    ef: jnp.ndarray | None = None  # (S, Bmax, p) error-feedback accumulator
+    # for the compressed halo exchange (None — an empty pytree — unless
+    # the ExchangeSpec threads one)
 
 
 class _ShardStatic(NamedTuple):
@@ -389,10 +430,19 @@ class ShardedAsyncEngine:
     neighbours co-locate and the cut shrinks (``partition.py``); ids
     visible to callers stay original under any relabeling —
     ``global_theta``/``SimResult`` need no unrelabel step. ``exchange``
-    picks the halo wire format: ``"all_gather"`` (replicated border
-    pool), ``"p2p"`` (neighbour-shard ``ppermute`` exchange), or
-    ``"auto"`` (whichever moves fewer rows on the measured cut); the two
-    formats are bit-exact interchangeable.
+    (an :class:`repro.core.mixing.ExchangeSpec`; deprecated bare strings
+    coerce) picks the halo wire format: ``method`` chooses the
+    collective (``"all_gather"`` replicated border pool / ``"p2p"``
+    neighbour-shard ``ppermute`` / ``"auto"`` by the measured cut — the
+    two are bit-exact interchangeable), ``dtype`` the payload precision
+    (``"bf16"``/``"int8"`` compress the wire; pair with
+    ``error_feedback=True`` so the quantization error re-enters the next
+    slot's payload instead of biasing the fixed point — the accumulator
+    rides in ``ShardedSimState.ef``). Configuration arrives as a shared
+    :class:`repro.sim.EngineConfig` (``config=...``), with the old
+    keyword arguments still accepted as overrides; ``fused`` collapses
+    the woken-row path into the ``fused_row_update`` Pallas kernel over
+    the halo-extended slab.
 
     Per-agent data and theory constants are **shard-resident**: the
     engine tiles ``update.agent_constants()`` (datasets X/y/mask,
@@ -415,7 +465,13 @@ class ShardedAsyncEngine:
     * **no per-edge delays** — the snapshot-ring delay scenario needs a
       (delay, neighbour)-pair halo exchange per ring slot; use the
       single-device engine for delay studies (churn and stragglers are
-      supported here).
+      supported here);
+    * **compressed halo rows** — with ``dtype="bf16"``/``"int8"`` the
+      halo copies a shard reads are quantized (locally-owned rows stay
+      full-precision), so sampled trajectories deviate from the f32 wire
+      at the wire precision per hop; error feedback keeps the *fixed
+      point* unbiased (recorded test: bf16+EF lands within 1e-4 of the
+      f32 fixed point where plain truncation does not).
     """
 
     def __init__(
@@ -423,39 +479,31 @@ class ShardedAsyncEngine:
         update: LocalUpdate,
         *,
         num_shards: int,
-        partition_mode: str = "degree",
-        relabel: str | np.ndarray | None = None,
-        coords: np.ndarray | None = None,
-        exchange: str = "auto",
-        partition=None,
-        slot_wakes: float = 64.0,
-        rates=None,
-        batch_size: int | None = None,
-        scenario: Scenario | None = None,
-        seed: int = 0,
-        dtype=jnp.float32,
-        steps_per_chunk: int = 16,
-        devices=None,
+        config: EngineConfig | None = None,
+        **kw,
     ):
+        cfg = resolve_config(config, kw)
+        self.config = cfg
         self.update = update
         self.n, self.p = update.n, update.p
-        self.dtype = dtype
-        self._seed = int(seed)
-        self.steps_per_chunk = int(steps_per_chunk)
-        self.scenario = scenario or Scenario()
+        self.dtype = cfg.dtype
+        self._seed = int(cfg.seed)
+        self.steps_per_chunk = int(cfg.steps_per_chunk)
+        self.scenario = cfg.scenario or Scenario()
         if self.scenario.delay is not None:
             raise NotImplementedError(
                 "per-edge delays are single-device only (the snapshot-ring "
                 "gather has no halo-exchange form yet); use AsyncEngine"
             )
 
-        devices = list(jax.devices() if devices is None else devices)
+        devices = list(jax.devices() if cfg.devices is None else cfg.devices)
         if len(devices) < num_shards:
             raise ValueError(
                 f"num_shards={num_shards} needs that many devices, "
                 f"have {len(devices)}"
             )
         self.mesh = Mesh(np.asarray(devices[:num_shards]), ("shards",))
+        partition = cfg.partition
         if partition is not None:
             # Reuse a prebuilt GraphPartition (e.g. one already analysed
             # for exchange stats) instead of re-running the relabel/cut/
@@ -470,18 +518,20 @@ class ShardedAsyncEngine:
             self.part = partition_graph(
                 as_csr(update.graph),
                 num_shards,
-                mode=partition_mode,
-                relabel=relabel,
-                coords=coords,
+                mode=cfg.partition_mode,
+                relabel=cfg.relabel,
+                coords=cfg.coords,
             )
-        self.smix = sharded_mix_op(self.part, method=exchange)
+        self.exchange_spec = cfg.exchange_spec()
+        self.smix = sharded_mix_op(self.part, exchange=self.exchange_spec)
         self.exchange_method = self.smix.method
         self.num_shards = self.part.num_shards
 
-        self.rates = clocks.normalize_rates(rates, self.n)
-        self.tau = clocks.slot_duration(self.rates, slot_wakes)
+        self.rates = clocks.normalize_rates(cfg.rates, self.n)
+        self.tau = clocks.slot_duration(self.rates, cfg.slot_wakes)
         self.wake_probs = clocks.wake_probs(self.rates, self.tau)
         R = self.part.rows_per_shard
+        batch_size = cfg.batch_size
         if batch_size is not None:
             if not (0 < batch_size <= R):
                 raise ValueError(f"batch_size must lie in (0, R={R}]")
@@ -541,6 +591,13 @@ class ShardedAsyncEngine:
             consts=consts_tiles,
         )
 
+        # The sharded slab is the halo-extended block (R + Hmax rows) —
+        # that is what the fused kernel keeps VMEM-resident per shard.
+        self.fused = _resolve_fused(
+            update, cfg.fused, R + self.smix.halo_width, self.dtype, False
+        )
+        self._use_ef = self.smix.error_feedback
+
         self._chunk = jax.jit(self._chunk_impl, static_argnums=2)
         self._forced = jax.jit(self._forced_impl)
 
@@ -573,6 +630,7 @@ class ShardedAsyncEngine:
             dropped=jnp.zeros(S, jnp.int32),
             messages=jnp.zeros(S, jnp.float32),
             ptr=jnp.zeros(S, jnp.int32),
+            ef=self.smix.init_error_feedback(self.p, self.dtype),
         )
 
     # -- one shard-local super-tick ----------------------------------------
@@ -604,8 +662,8 @@ class ShardedAsyncEngine:
 
         Theta = state.Theta[0]
         ex = jax.tree.map(lambda a: a[0], static.exchange)
-        Theta_ext = self.smix.exchange_halo(Theta, ex)
-        neigh = self.smix.gather_rows(Theta_ext, static.idx[0], static.w[0], woken)
+        ef = state.ef[0] if self._use_ef else None
+        Theta_ext, ef_new = self.smix.exchange_halo(Theta, ex, ef)
 
         safe = jnp.minimum(woken, R - 1)
         grows = jnp.where(valid, static.owned[0][safe], n)  # global ids, sentinel n
@@ -615,12 +673,24 @@ class ShardedAsyncEngine:
             if static.consts is None
             else jax.tree.map(lambda t: t[0][safe], static.consts)
         )
-        new_rows, applied, ustate = self.update.apply_rows(
-            Theta[safe], grows, valid, neigh, k_upd, ustate,
-            srows=woken, ssize=R, consts=consts_rows,
-        )
-        tgt = jnp.where(applied, woken, R)
-        Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
+        if self.fused:
+            # One Pallas launch over the halo-extended slab: gather + mix
+            # + Eq. 4/6 + scatter; owned rows [:R] come back updated.
+            cols = static.idx[0][safe]  # (B, K) extended-local indices
+            ww = jnp.asarray(static.w[0], jnp.float32)[safe]  # (B, K)
+            new_ext, applied, ustate = self.update.apply_fused(
+                Theta_ext, grows, valid, k_upd, ustate, cols, ww,
+                srows=woken, ssize=R, consts=consts_rows,
+            )
+            Theta = new_ext[:R].astype(Theta.dtype)
+        else:
+            neigh = self.smix.gather_rows(Theta_ext, static.idx[0], static.w[0], woken)
+            new_rows, applied, ustate = self.update.apply_rows(
+                Theta[safe], grows, valid, neigh, k_upd, ustate,
+                srows=woken, ssize=R, consts=consts_rows,
+            )
+            tgt = jnp.where(applied, woken, R)
+            Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
 
         messages = state.messages[0] + jnp.sum(
             jnp.where(applied, static.deg[0][safe], 0.0)
@@ -634,6 +704,7 @@ class ShardedAsyncEngine:
             dropped=(state.dropped[0] + dropped)[None],
             messages=messages[None],
             ptr=(state.ptr[0] + 1)[None],
+            ef=ef_new[None] if self._use_ef else None,
         )
 
     def _chunk_impl(self, state, static, steps: int):

@@ -247,6 +247,48 @@ def sfc_order(coords: np.ndarray) -> np.ndarray:
     return np.argsort(key, kind="stable").astype(np.int64)
 
 
+def hilbert_order(coords: np.ndarray, bits: int = 16) -> np.ndarray:
+    """Hilbert-curve space-filling ordering of 2-D coordinates.
+
+    Same contract as :func:`sfc_order` (Morton), but sorts by the Hilbert
+    curve index instead of the bit-interleaved Z-order key. The Hilbert
+    curve has no diagonal jumps — consecutive curve positions are always
+    grid neighbours — so block cuts along it have strictly local
+    boundaries where Morton's quadrant seams put far-apart points at
+    adjacent positions. That is exactly the S=16 regime the ROADMAP
+    flags: more shards means more cuts landing on Morton seams. Returns
+    (n,) position -> agent id.
+
+    Vectorized transcription of the standard ``xy2d`` bit-descent: per
+    quantization level ``s`` the quadrant pair (rx, ry) contributes
+    ``s^2 * ((3 rx) XOR ry)`` to the curve index, then the lower-level
+    coordinates are rotated/reflected into the quadrant's frame.
+    """
+    c = np.asarray(coords, dtype=np.float64)
+    if c.ndim != 2 or c.shape[1] != 2:
+        raise ValueError(f"coords must be (n, 2), got {c.shape}")
+    mins = c.min(axis=0)
+    span = c.max(axis=0) - mins
+    span = np.where(span > 0.0, span, 1.0)
+    q = ((c - mins) / span * (2**bits - 1)).astype(np.int64)
+    x, y = q[:, 0].copy(), q[:, 1].copy()
+    d = np.zeros(len(c), dtype=np.int64)
+    s = np.int64(1) << (bits - 1)
+    while s > 0:
+        rx = ((x & s) > 0).astype(np.int64)
+        ry = ((y & s) > 0).astype(np.int64)
+        d += s * s * ((3 * rx) ^ ry)
+        # Rotate the sub-square: in the ry == 0 quadrants the lower bits
+        # traverse a reflected/transposed copy of the curve.
+        flip = (ry == 0) & (rx == 1)
+        x = np.where(flip, s - 1 - x, x)
+        y = np.where(flip, s - 1 - y, y)
+        swap = ry == 0
+        x, y = np.where(swap, y, x), np.where(swap, x, y)
+        s >>= 1
+    return np.argsort(d, kind="stable").astype(np.int64)
+
+
 def _resolve_order(csr: CSRGraph, relabel, coords) -> tuple[str | None, np.ndarray]:
     """Resolve the ``relabel`` argument into (mode name, order array)."""
     n = csr.n
@@ -255,14 +297,18 @@ def _resolve_order(csr: CSRGraph, relabel, coords) -> tuple[str | None, np.ndarr
     if isinstance(relabel, str):
         if relabel == "rcm":
             return "rcm", rcm_order(csr)
-        if relabel == "sfc":
+        if relabel in ("sfc", "hilbert"):
             if coords is None:
-                raise ValueError("relabel='sfc' needs coords: the (n, 2) agent positions")
-            order = sfc_order(coords)
+                raise ValueError(
+                    f"relabel={relabel!r} needs coords: the (n, 2) agent positions"
+                )
+            order = sfc_order(coords) if relabel == "sfc" else hilbert_order(coords)
             if len(order) != n:
                 raise ValueError(f"coords rows ({len(order)}) != agents ({n})")
-            return "sfc", order
-        raise ValueError(f"unknown relabel mode {relabel!r} (use 'rcm', 'sfc', or an order)")
+            return relabel, order
+        raise ValueError(
+            f"unknown relabel mode {relabel!r} (use 'rcm', 'sfc', 'hilbert', or an order)"
+        )
     order = np.asarray(relabel, dtype=np.int64)
     if order.shape != (n,) or not np.array_equal(np.sort(order), np.arange(n)):
         raise ValueError("explicit relabel must be a permutation of arange(n)")

@@ -20,7 +20,13 @@ from repro.core import (
     ring_graph,
 )
 from repro.core.mixing import sharded_mix_op
-from repro.sim import partition_graph, point_to_point_plan, rcm_order, sfc_order
+from repro.sim import (
+    hilbert_order,
+    partition_graph,
+    point_to_point_plan,
+    rcm_order,
+    sfc_order,
+)
 
 
 def _graphs():
@@ -247,8 +253,10 @@ def test_relabel_validation_and_orders():
     g = as_csr(ring_graph(8))
     with pytest.raises(ValueError, match="coords"):
         partition_graph(g, 2, relabel="sfc")
-    with pytest.raises(ValueError, match="relabel"):
+    with pytest.raises(ValueError, match="coords"):
         partition_graph(g, 2, relabel="hilbert")
+    with pytest.raises(ValueError, match="relabel"):
+        partition_graph(g, 2, relabel="metis")
     with pytest.raises(ValueError, match="permutation"):
         partition_graph(g, 2, relabel=np.zeros(8, dtype=np.int64))
     with pytest.raises(ValueError, match="coords"):
@@ -264,3 +272,38 @@ def test_relabel_validation_and_orders():
     # Morton order on a line of points is the line order.
     coords = np.stack([np.linspace(0, 1, 8), np.zeros(8)], axis=1)
     np.testing.assert_array_equal(sfc_order(coords), np.arange(8))
+
+
+def test_hilbert_order_walks_unit_steps_on_full_grid():
+    """Defining Hilbert property: consecutive curve positions are grid
+    neighbours (L1 step exactly 1 on a full 2^k x 2^k grid). The Morton
+    curve jumps — up to a full grid side — which is exactly the diagonal
+    discontinuity the Hilbert relabel removes."""
+    k = 16
+    xs, ys = np.meshgrid(np.arange(k), np.arange(k), indexing="ij")
+    coords = np.stack([xs.ravel(), ys.ravel()], axis=1).astype(float)
+    order = hilbert_order(coords, bits=4)
+    np.testing.assert_array_equal(np.sort(order), np.arange(k * k))  # permutation
+    steps = np.abs(np.diff(coords[order], axis=0)).sum(axis=1)
+    assert (steps == 1).all()
+    morton_steps = np.abs(np.diff(coords[sfc_order(coords)], axis=0)).sum(axis=1)
+    assert morton_steps.max() > 1  # Morton demonstrably jumps
+    with pytest.raises(ValueError, match="coords"):
+        hilbert_order(np.zeros((8, 3)))
+
+
+def test_hilbert_relabel_beats_morton_at_s16():
+    """Acceptance (PR-6 satellite): at S=16 on a shuffled random geometric
+    graph the Hilbert relabel's halo fraction is no worse than the Morton
+    SFC's — and its point-to-point plan ships strictly fewer rows — while
+    both stay far below the unrelabeled cut."""
+    rng = np.random.default_rng(0)
+    g, pos = random_geometric_graph(4096, rng, avg_degree=16.0, return_pos=True)
+    base = partition_graph(g, 16)
+    sfc = partition_graph(g, 16, relabel="sfc", coords=pos)
+    hil = partition_graph(g, 16, relabel="hilbert", coords=pos)
+    assert base.halo_fraction() > 0.6
+    assert hil.halo_fraction() <= 0.35
+    assert hil.halo_fraction() <= sfc.halo_fraction() + 1e-9
+    assert hil.exchange_rows("p2p") < sfc.exchange_rows("p2p")
+    assert sharded_mix_op(hil).method == "p2p"

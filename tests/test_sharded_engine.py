@@ -182,7 +182,8 @@ MULTIDEV_SCRIPT = textwrap.dedent(
     import numpy as np, jax.numpy as jnp
     from repro.core import (AgentData, DPConfig, erdos_renyi_graph, knn_graph,
                             make_objective, run_private)
-    from repro.sim import AsyncEngine, CDUpdate, DPCDUpdate, ShardedAsyncEngine
+    from repro.sim import (AsyncEngine, CDUpdate, DPCDUpdate, ExchangeSpec,
+                       ShardedAsyncEngine)
 
     assert len(jax.devices()) == 8
 
@@ -209,10 +210,11 @@ MULTIDEV_SCRIPT = textwrap.dedent(
     configs = [
         dict(partition_mode="contiguous"),
         dict(partition_mode="degree"),
-        dict(partition_mode="degree", exchange="p2p"),
-        dict(partition_mode="degree", relabel="rcm", exchange="all_gather"),
-        dict(partition_mode="degree", relabel="rcm", exchange="p2p"),
-        dict(partition_mode="contiguous", relabel="rcm", exchange="auto"),
+        dict(partition_mode="degree", exchange=ExchangeSpec(method="p2p")),
+        dict(partition_mode="degree", relabel="rcm",
+             exchange=ExchangeSpec(method="all_gather")),
+        dict(partition_mode="degree", relabel="rcm", exchange=ExchangeSpec(method="p2p")),
+        dict(partition_mode="contiguous", relabel="rcm", exchange=ExchangeSpec()),
     ]
     for kw in configs:
         engS = ShardedAsyncEngine(CDUpdate(obj), num_shards=4, slot_wakes=8.0,
@@ -243,7 +245,7 @@ MULTIDEV_SCRIPT = textwrap.dedent(
                       record_objective=False)
     upd = DPCDUpdate.plan(objd, cfg, planned_Ti=planned_Ti)
     engd = ShardedAsyncEngine(upd, num_shards=4, slot_wakes=12.0, seed=0,
-                              relabel="rcm", exchange="p2p")
+                              relabel="rcm", exchange=ExchangeSpec(method="p2p"))
     st = engd.init_state(np.zeros((12, 3)))
     for _ in range(5):
         st = engd.step(st, np.ones(12, bool))
@@ -269,7 +271,7 @@ FIXED_POINT_SCRIPT = textwrap.dedent(
     jax.config.update("jax_enable_x64", True)
     import numpy as np, jax.numpy as jnp
     from repro.core import AgentData, knn_graph, make_objective
-    from repro.sim import CDUpdate, ShardedAsyncEngine
+    from repro.sim import CDUpdate, ExchangeSpec, ShardedAsyncEngine
 
     rng = np.random.default_rng(0)
     n, p, m = 512, 4, 3
@@ -283,8 +285,8 @@ FIXED_POINT_SCRIPT = textwrap.dedent(
     upd = CDUpdate(obj)
     # Cover the exchange/relabel matrix across the shard counts without
     # blowing up runtime: each S exercises a different configuration.
-    for S, kw in ((2, {}), (4, dict(relabel="rcm", exchange="p2p")),
-                  (8, dict(relabel="rcm", exchange="auto"))):
+    for S, kw in ((2, {}), (4, dict(relabel="rcm", exchange=ExchangeSpec(method="p2p"))),
+                  (8, dict(relabel="rcm", exchange=ExchangeSpec()))):
         eng = ShardedAsyncEngine(upd, num_shards=S, slot_wakes=128.0, seed=3,
                                  dtype=jnp.float64, **kw)
         res = eng.run(np.zeros((n, p)), slots=700)
