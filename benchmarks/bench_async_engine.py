@@ -31,6 +31,7 @@ def run(
     seed: int = 0,
     churn: bool = True,
     delay: bool = False,
+    metrics: bool = False,
     verbose: bool = True,
 ):
     from benchmarks.bench_sparse_scale import _make_problem
@@ -52,7 +53,8 @@ def run(
         delay=DelayConfig(max_delay=2, edge_delays=1) if delay else None,
     )
     engine = AsyncEngine(
-        CDUpdate(obj), slot_wakes=slot_wakes, scenario=scenario, seed=seed
+        CDUpdate(obj), slot_wakes=slot_wakes, scenario=scenario, seed=seed,
+        metrics=metrics,
     )
 
     # No (n, n) array anywhere on the engine path (same guard as the
@@ -89,6 +91,19 @@ def run(
         ("async_equiv_ticks_per_s", ticks_per_s,
          f"{applied} wakes applied, {int(state.dropped)} dropped, compile {compile_s:.1f}s"),
     ]
+    if metrics:
+        # In-jit telemetry totals (the timed halves ran with counters on,
+        # so the super-tick row above already includes their cost).
+        from repro.obs import summarize_counters
+
+        counters, _derived = engine.metrics_snapshot(state)
+        totals = summarize_counters(counters)
+        for key in ("wakes_realized", "wakes_thinned", "churn_departures"):
+            if key in totals:
+                rows.append(
+                    (f"async_metrics_{key}", float(totals[key]),
+                     f"telemetry total over {2 * slots} slots")
+                )
     if verbose:
         for name, v, note in rows:
             print(f"{name},{v:.4g},{note}")
@@ -103,6 +118,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-churn", action="store_true")
     ap.add_argument("--delay", action="store_true", help="enable per-edge delays")
+    ap.add_argument("--metrics", action="store_true",
+                    help="run with in-jit telemetry on and report its totals")
     args = ap.parse_args(argv)
     run(
         n=args.n,
@@ -111,6 +128,7 @@ def main(argv=None):
         seed=args.seed,
         churn=not args.no_churn,
         delay=args.delay,
+        metrics=args.metrics,
     )
 
 

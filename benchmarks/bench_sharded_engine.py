@@ -88,6 +88,7 @@ def run(
     relabel: str | None = "rcm",
     exchange: str = "auto",
     fused="auto",
+    metrics: bool = False,
     roofline: bool = True,
     verbose: bool = True,
 ):
@@ -138,6 +139,7 @@ def run(
         scenario=scenario,
         seed=seed,
         fused=fused,
+        metrics=metrics,
     )
     part_s = time.time() - t0
     part = engine.part
@@ -190,6 +192,19 @@ def run(
          f"{applied} wakes applied, {int(np.asarray(state.dropped).sum())} dropped, "
          f"compile {compile_s:.1f}s"),
     ] + stats_rows
+    if metrics:
+        # In-jit telemetry totals (counters were live through the timed
+        # halves, so the super-tick row above already includes their cost).
+        from repro.obs import summarize_counters
+
+        counters, _derived = engine.metrics_snapshot(state)
+        totals = summarize_counters(counters)
+        for key in ("wakes_realized", "exchange_bytes", "churn_departures"):
+            if key in totals:
+                rows.append(
+                    (f"sharded_metrics_{key}", float(totals[key]),
+                     f"telemetry total over {2 * slots} slots, summed over shards")
+                )
     if roofline:
         # Place the compiled super-tick on the bandwidth roofline (the
         # program advance() just ran, fused kernel and compressed halos
@@ -223,6 +238,8 @@ def main(argv=None):
                          "auto|all_gather|p2p and dtype f32|bf16|int8 "
                          "(e.g. p2p:bf16, p2p:int8:ef)")
     ap.add_argument("--fused", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--metrics", action="store_true",
+                    help="run with in-jit telemetry on and report its totals")
     ap.add_argument("--no-roofline", action="store_true")
     args = ap.parse_args(argv)
     if "jax" not in sys.modules and "host_platform_device_count" not in os.environ.get(
@@ -244,6 +261,7 @@ def main(argv=None):
         relabel=None if args.relabel == "none" else args.relabel,
         exchange=args.exchange,
         fused={"auto": "auto", "on": True, "off": False}[args.fused],
+        metrics=args.metrics,
         roofline=not args.no_roofline,
     )
 

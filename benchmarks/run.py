@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.run            # fast mode (CI-sized)
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale
+    PYTHONPATH=src python -m benchmarks.run --list     # show bench names
+    PYTHONPATH=src python -m benchmarks.run --only obs # run one bench
 
 Prints ``name,us_per_call,derived`` CSV lines per bench plus per-table
 summaries. Every run (fast mode included) writes the machine-readable
@@ -13,57 +15,234 @@ land in results/*.json and EXPERIMENTS.md.
 from __future__ import annotations
 
 import argparse
-import json
 import os
+import shutil
 import subprocess
 import sys
 import time
 
 
-def _merge_summary(path: str, rows) -> None:
-    """Merge this run's rows into the name -> {us_per_call, derived} map.
+def _merge_summary(path, rows):
+    """Shared with the report CLI so the two summary writers cannot drift."""
+    try:
+        from repro.obs.report import merge_bench_summary
+    except ImportError:
+        sys.path.insert(
+            0, os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+        )
+        from repro.obs.report import merge_bench_summary
+    merge_bench_summary(path, rows)
 
-    Merging (not clobbering) lets ``--only`` debug runs and the
-    subprocess-launched benches update their own entries without erasing
-    the accumulated trajectory of everything else.
+
+def _subprocess_bench(module: str, cli: list, row_prefix: str) -> list:
+    """Run a bench module in a subprocess with 8 forced host devices.
+
+    Multi-device benches need host-platform devices, which XLA only
+    grants before its first initialization — too late for a process that
+    already imported jax. The subprocess reports back via its CSV rows;
+    every ``row_prefix*`` line it prints becomes a summary row here.
     """
-    data = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                data = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            data = {}
-    if not isinstance(data, dict):
-        data = {}
-    data.update({n: {"us_per_call": u, "derived": d} for n, u, d in rows})
-    with open(path, "w") as f:
-        json.dump(data, f, indent=2, sort_keys=True)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, ["src", env.get("PYTHONPATH", "")])
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", module, *cli], env=env, capture_output=True, text=True
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(f"{module} failed:\n{proc.stderr[-3000:]}")
+    rows = []
+    for line in proc.stdout.splitlines():
+        if not line.startswith(row_prefix) or line.count(",") < 2:
+            continue
+        name, val, note = line.split(",", 2)
+        rows.append((name, float(val), note))
+    if not rows:
+        raise RuntimeError(
+            f"{module} printed no {row_prefix}* rows; stdout was:\n"
+            f"{proc.stdout[-2000:]}"
+        )
+    return rows
 
 
-def main(argv=None) -> None:
+def _bench_fig1(full, rows, record):
+    from benchmarks import bench_cd_vs_admm
+
+    t0 = time.time()
+    kw = {} if full else dict(n=30, p=20, T_cd=800, T_admm=80)
+    r = bench_cd_vs_admm.run(out="results/fig1_cd_vs_admm.json", **kw)
+    record("fig1_cd_vs_admm", t0,
+           f"cd_beats_admm_per_message={r['cd_beats_admm_per_message']}")
+
+
+def _bench_fig2(full, rows, record):
+    from benchmarks import bench_privacy_utility
+
+    t0 = time.time()
+    r = bench_privacy_utility.run(out="results/fig2_privacy_utility.json",
+                                  fast=not full)
+    acc = r["fig2c"][-1]
+    record("fig2_privacy_utility", t0,
+           f"acc_local={acc['acc_local']:.3f},acc_nonpriv={acc['acc_nonprivate']:.3f}")
+
+
+def _bench_table1(full, rows, record):
+    from benchmarks import bench_movielens
+
+    t0 = time.time()
+    r = bench_movielens.run(out="results/table1_movielens_fastmode.json",
+                            fast=not full)
+    record("table1_movielens", t0,
+           f"rmse_local={r['rmse_local']:.3f},rmse_cd={r['rmse_cd']:.3f}")
+
+
+def _bench_ablations(full, rows, record):
+    from benchmarks import bench_ablations
+
+    t0 = time.time()
+    r = bench_ablations.run(out="results/ablations.json", fast=not full)
+    record("ablations", t0,
+           f"personalized={r['personalization']['acc_personalized']:.3f},"
+           f"global={r['personalization']['acc_global']:.3f}")
+
+
+def _bench_kernels(full, rows, record):
+    from benchmarks import bench_kernels
+
+    t0 = time.time()
+    ks = bench_kernels.run()
+    # Per-kernel rows (fused_row_update etc.) join the summary alongside
+    # the aggregate, so kernel-level perf has its own trajectory.
+    rows.extend(ks)
+    record("kernels", t0, f"{len(ks)} kernels timed")
+
+
+def _bench_sparse_scale(full, rows, record):
+    from benchmarks import bench_sparse_scale
+
+    t0 = time.time()
+    kw = dict(n=100_000, ticks=2_000) if full else dict(n=5_000, ticks=200)
+    ss = bench_sparse_scale.run(verbose=False, **kw)
+    tick_us = next(v for name, v, _ in ss if name == "sparse_cd_tick")
+    record("sparse_scale", t0, f"n={kw['n']},us_per_seq_tick={tick_us:.3g}")
+
+
+def _bench_async_engine(full, rows, record):
+    from benchmarks import bench_async_engine
+
+    t0 = time.time()
+    kw = (
+        dict(n=500_000, slots=12, slot_wakes=4096.0)
+        if full
+        else dict(n=20_000, slots=4, slot_wakes=512.0)
+    )
+    ae = bench_async_engine.run(churn=True, verbose=False, **kw)
+    rate = next(v for name, v, _ in ae if name == "async_equiv_ticks_per_s")
+    record("async_engine", t0, f"n={kw['n']},churn=1,equiv_ticks_per_s={rate:.4g}")
+
+
+def _bench_sharded_engine(full, rows, record):
+    t0 = time.time()
+    kw = (
+        dict(n=1_000_000, slots=8, slot_wakes=8192.0)
+        if full
+        else dict(n=100_000, slots=4, slot_wakes=2048.0)
+    )
+    # Tick rates, partition stats, the halo-fraction / exchanged-bytes
+    # sweep over {no relabel, RCM} x {all_gather, p2p} — every sharded_*
+    # row the subprocess prints joins the summary under its own name.
+    sub = _subprocess_bench(
+        "benchmarks.bench_sharded_engine",
+        ["--n", str(kw["n"]), "--shards", "8",
+         "--slots", str(kw["slots"]), "--slot-wakes", str(kw["slot_wakes"])],
+        "sharded_",
+    )
+    rows.extend(sub)
+    rate = next(
+        (v for name, v, _ in sub if name == "sharded_equiv_ticks_per_s"), None
+    )
+    if rate is None:
+        raise RuntimeError("sharded_engine printed no sharded_equiv_ticks_per_s row")
+    record("sharded_engine", t0,
+           f"n={kw['n']},shards=8,equiv_ticks_per_s={rate:.4g}")
+
+
+def _bench_obs(full, rows, record):
+    t0 = time.time()
+    # Keep the slot loaded (>=2048 wakes) even in fast mode: the overhead
+    # comparison divides a ~100us-scale metrics delta by the slot time, so
+    # an under-loaded slot reads as inflated percentage (pure noise).
+    kw = (
+        dict(n=200_000, slots=8, slot_wakes=4096.0)
+        if full
+        else dict(n=50_000, slots=6, slot_wakes=2048.0)
+    )
+    # Telemetry overhead (metrics-on vs off, target <=5%) and the
+    # obs_phase_* decomposition of the super-tick behind the
+    # sharded_roofline_supertick_gap row; also writes the trace.json and
+    # RunReport JSONL artifacts under results/.
+    sub = _subprocess_bench(
+        "benchmarks.bench_obs",
+        ["--n", str(kw["n"]), "--shards", "8",
+         "--slots", str(kw["slots"]), "--slot-wakes", str(kw["slot_wakes"])],
+        "obs_",
+    )
+    rows.extend(sub)
+    over = next((v for name, v, _ in sub if name == "obs_overhead"), None)
+    if over is None:
+        raise RuntimeError("obs bench printed no obs_overhead row")
+    record("obs", t0, f"n={kw['n']},shards=8,overhead_pct={over:.3g}")
+
+
+def _bench_roofline(full, rows, record):
+    from benchmarks import bench_roofline
+
+    t0 = time.time()
+    rs = bench_roofline.run()
+    record("roofline", t0, f"{len(rs)} dry-run rows")
+
+
+# Registration order is execution order; roofline stays last so its
+# dry-run rows print after the measured ones they contextualize.
+BENCHES = {
+    "fig1": _bench_fig1,
+    "fig2": _bench_fig2,
+    "table1": _bench_table1,
+    "ablations": _bench_ablations,
+    "kernels": _bench_kernels,
+    "sparse_scale": _bench_sparse_scale,
+    "async_engine": _bench_async_engine,
+    "sharded_engine": _bench_sharded_engine,
+    "obs": _bench_obs,
+    "roofline": _bench_roofline,
+}
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
-    ap.add_argument("--only", default=None,
-                    choices=[None, "fig1", "fig2", "table1", "kernels", "roofline",
-                             "ablations", "sparse_scale", "async_engine",
-                             "sharded_engine"])
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help="run a single bench (see --list)")
+    ap.add_argument("--list", action="store_true", help="list bench names and exit")
     args = ap.parse_args(argv)
+
+    if args.list:
+        for name in BENCHES:
+            print(name)
+        return 0
+    if args.only is not None and args.only not in BENCHES:
+        print(
+            f"unknown bench {args.only!r}; valid names: {', '.join(BENCHES)}",
+            file=sys.stderr,
+        )
+        return 2
 
     import jax
 
     jax.config.update("jax_enable_x64", True)  # paper-core benches need f64
-
-    from benchmarks import (
-        bench_ablations,
-        bench_async_engine,
-        bench_cd_vs_admm,
-        bench_kernels,
-        bench_movielens,
-        bench_privacy_utility,
-        bench_roofline,
-        bench_sparse_scale,
-    )
 
     os.makedirs("results", exist_ok=True)
     rows = []
@@ -73,121 +252,21 @@ def main(argv=None) -> None:
         rows.append((name, us, derived))
         print(f"{name},{us:.0f},{derived}")
 
-    if args.only in (None, "fig1"):
-        t0 = time.time()
-        kw = {} if args.full else dict(n=30, p=20, T_cd=800, T_admm=80)
-        r = bench_cd_vs_admm.run(out="results/fig1_cd_vs_admm.json", **kw)
-        record("fig1_cd_vs_admm", t0,
-               f"cd_beats_admm_per_message={r['cd_beats_admm_per_message']}")
-
-    if args.only in (None, "fig2"):
-        t0 = time.time()
-        r = bench_privacy_utility.run(out="results/fig2_privacy_utility.json",
-                                      fast=not args.full)
-        acc = r["fig2c"][-1]
-        record("fig2_privacy_utility", t0,
-               f"acc_local={acc['acc_local']:.3f},acc_nonpriv={acc['acc_nonprivate']:.3f}")
-
-    if args.only in (None, "table1"):
-        t0 = time.time()
-        r = bench_movielens.run(out="results/table1_movielens_fastmode.json",
-                                fast=not args.full)
-        record("table1_movielens", t0,
-               f"rmse_local={r['rmse_local']:.3f},rmse_cd={r['rmse_cd']:.3f}")
-
-    if args.only in (None, "ablations"):
-        t0 = time.time()
-        r = bench_ablations.run(out="results/ablations.json", fast=not args.full)
-        record("ablations", t0,
-               f"personalized={r['personalization']['acc_personalized']:.3f},"
-               f"global={r['personalization']['acc_global']:.3f}")
-
-    if args.only in (None, "kernels"):
-        t0 = time.time()
-        ks = bench_kernels.run()
-        # Per-kernel rows (fused_row_update etc.) join the summary alongside
-        # the aggregate, so kernel-level perf has its own trajectory.
-        rows.extend(ks)
-        record("kernels", t0, f"{len(ks)} kernels timed")
-
-    if args.only in (None, "sparse_scale"):
-        t0 = time.time()
-        kw = dict(n=100_000, ticks=2_000) if args.full else dict(n=5_000, ticks=200)
-        ss = bench_sparse_scale.run(verbose=False, **kw)
-        tick_us = next(v for name, v, _ in ss if name == "sparse_cd_tick")
-        record("sparse_scale", t0, f"n={kw['n']},us_per_seq_tick={tick_us:.3g}")
-
-    if args.only in (None, "async_engine"):
-        t0 = time.time()
-        kw = (
-            dict(n=500_000, slots=12, slot_wakes=4096.0)
-            if args.full
-            else dict(n=20_000, slots=4, slot_wakes=512.0)
-        )
-        ae = bench_async_engine.run(churn=True, verbose=False, **kw)
-        rate = next(v for name, v, _ in ae if name == "async_equiv_ticks_per_s")
-        record("async_engine", t0, f"n={kw['n']},churn=1,equiv_ticks_per_s={rate:.4g}")
-
-    if args.only in (None, "sharded_engine"):
-        # Multi-device engine: needs 8 host-platform devices, which XLA only
-        # grants before its first initialization — so this bench runs in a
-        # subprocess with the flag forced and reports back via its CSV rows.
-        t0 = time.time()
-        kw = (
-            dict(n=1_000_000, slots=8, slot_wakes=8192.0)
-            if args.full
-            else dict(n=100_000, slots=4, slot_wakes=2048.0)
-        )
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (
-            env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
-        ).strip()
-        env["PYTHONPATH"] = os.pathsep.join(
-            filter(None, ["src", env.get("PYTHONPATH", "")])
-        )
-        proc = subprocess.run(
-            [sys.executable, "-m", "benchmarks.bench_sharded_engine",
-             "--n", str(kw["n"]), "--shards", "8",
-             "--slots", str(kw["slots"]), "--slot-wakes", str(kw["slot_wakes"])],
-            env=env, capture_output=True, text=True,
-        )
-        if proc.returncode != 0:
-            raise RuntimeError(f"sharded_engine bench failed:\n{proc.stderr[-3000:]}")
-        # Merge every sharded_* CSV row the subprocess printed (tick
-        # rates, partition stats, the halo-fraction / exchanged-bytes
-        # sweep over {no relabel, RCM} x {all_gather, p2p}) into the
-        # summary under its own name.
-        rate = None
-        for line in proc.stdout.splitlines():
-            if not line.startswith("sharded_") or line.count(",") < 2:
-                continue
-            name, val, note = line.split(",", 2)
-            rows.append((name, float(val), note))
-            if name == "sharded_equiv_ticks_per_s":
-                rate = float(val)
-        if rate is None:
-            raise RuntimeError(
-                "sharded_engine bench printed no sharded_equiv_ticks_per_s "
-                f"row; stdout was:\n{proc.stdout[-2000:]}"
-            )
-        record("sharded_engine", t0,
-               f"n={kw['n']},shards=8,equiv_ticks_per_s={rate:.4g}")
-
-    if args.only in (None, "roofline"):
-        t0 = time.time()
-        rs = bench_roofline.run()
-        record("roofline", t0, f"{len(rs)} dry-run rows")
+    for name, bench in BENCHES.items():
+        if args.only in (None, name):
+            bench(args.full, rows, record)
 
     # Machine-readable per-PR perf trajectory (fast mode and --only runs
     # included): the stable contract is name -> {us_per_call, derived},
     # merged into the existing map so a partial --only run updates its own
-    # entries without clobbering the accumulated trajectory. Written both
-    # under results/ and at the repo root, where the perf-history tooling
-    # looks. (This replaces the old list-format bench_summary.json, whose
-    # name differed only by case.)
+    # entries without clobbering the accumulated trajectory. Written once
+    # under results/ and copied byte-identical to the repo root, where the
+    # perf-history tooling looks (tools/check_bench_sync.py asserts the
+    # two stay in sync).
     _merge_summary("results/BENCH_summary.json", rows)
-    _merge_summary("BENCH_summary.json", rows)
+    shutil.copyfile("results/BENCH_summary.json", "BENCH_summary.json")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -145,6 +145,11 @@ class MixOp:
 _EXCHANGE_METHODS = ("all_gather", "p2p", "auto")
 _EXCHANGE_DTYPES = ("f32", "bf16", "int8")
 
+# The bare-string deprecation fires once per process, not once per engine:
+# sweeps and parity tests construct dozens of engines from the same config
+# and a warning per construction is noise that buries real warnings.
+_warned_bare_exchange_string = False
+
 
 @dataclasses.dataclass(frozen=True)
 class ExchangeSpec:
@@ -211,12 +216,15 @@ class ExchangeSpec:
         if isinstance(value, cls):
             return value
         if isinstance(value, str):
-            warnings.warn(
-                f"passing exchange={value!r} as a bare string is deprecated; "
-                f"use ExchangeSpec (e.g. ExchangeSpec.from_string({value!r}))",
-                DeprecationWarning,
-                stacklevel=3,
-            )
+            global _warned_bare_exchange_string
+            if not _warned_bare_exchange_string:
+                _warned_bare_exchange_string = True
+                warnings.warn(
+                    f"passing exchange={value!r} as a bare string is deprecated; "
+                    f"use ExchangeSpec (e.g. ExchangeSpec.from_string({value!r}))",
+                    DeprecationWarning,
+                    stacklevel=3,
+                )
             return cls.from_string(value)
         raise TypeError(f"exchange must be an ExchangeSpec or string, got {type(value)!r}")
 
@@ -335,59 +343,114 @@ class ShardedMixOp:
         q = jnp.clip(jnp.round(v / scale), -127.0, 127.0).astype(jnp.int8)
         return {"q": q, "scale": scale}, q.astype(v.dtype) * scale
 
-    def exchange_halo(self, Theta_local, ex, ef=None):
+    def exchange_halo(self, Theta_local, ex, ef=None, *, upto=None, collect_stats=False):
         """Extend this shard's (R, p) block with its halo rows.
 
         Runs inside ``shard_map``. ``ex`` is this shard's slice of
         :meth:`exchange_inputs` (leading S axis already consumed); ``ef``
         is this shard's (Bmax, p) error-feedback accumulator slice (None
-        when not threaded). Returns ``(Theta_ext, ef_new)``: the
-        (R + Hmax, p) extended array the tiles index — halo slots past
-        this shard's real halo size are unreferenced by the tiles — and
+        when not threaded). Returns ``(out, ef_new, stats)`` where ``out``
+        for the full exchange (``upto=None``) is the (R + Hmax, p)
+        extended array the tiles index — halo slots past this shard's
+        real halo size are unreferenced by the tiles — and ``ef_new`` is
         the updated accumulator (unchanged/None without error feedback).
+
+        The exchange decomposes into three ``jax.named_scope`` phases the
+        super-tick profiler can cut at (``upto``):
+
+        * ``"halo_publish"`` — gather/quantize/pack this shard's border
+          rows into the send payload (``out`` = the packed payload);
+        * ``"halo_collective"`` — the ``ppermute``s / ``all_gather`` that
+          ship it (``out`` = the received raw buffers);
+        * ``None`` (``"halo_scatter"``) — dequantize and place received
+          rows into the halo slots (``out`` = ``Theta_ext``).
+
+        ``collect_stats=True`` on a compressed wire reports the
+        telemetry dict ``{"quant_err_sq", "ef_residual_sq"}`` computed
+        from values the exchange already produced (stats is None
+        otherwise) — collection never perturbs the payload.
         """
         S = self.num_shards
-        if self.dtype == "f32":
+        stats = None
+
+        # -- publish: pack (and on compressed wires, quantize) the border.
+        with jax.named_scope("obs.halo_publish"):
+            scales = None
+            ef_new = ef
+            if self.dtype == "f32":
+                if self.method == "p2p":
+                    send = tuple(Theta_local[snd] for snd in ex["send"])  # (P_d, p) each
+                else:
+                    send = Theta_local[ex["border"]]  # (Bmax, p)
+            else:
+                # Compressed wire: quantize the border pool once per slot —
+                # every reader receives the same dequantized copy — and ship
+                # the narrow payload through whichever collective the plan
+                # chose.
+                v = Theta_local[ex["border"]]  # (Bmax, p)
+                if ef is not None:
+                    v = v + ef.astype(v.dtype)
+                payload, dq = self._quantize(v)
+                ef_new = (v - dq) if ef is not None else ef
+                if collect_stats:
+                    err = (v - dq).astype(jnp.float32)
+                    res = err if ef is not None else jnp.zeros_like(err)
+                    stats = {
+                        "quant_err_sq": jnp.sum(jnp.square(err)),
+                        "ef_residual_sq": jnp.sum(jnp.square(res)),
+                    }
+                if self.method == "p2p":
+                    send = tuple(payload["q"][bpos] for bpos in ex["bpos"])
+                    if "scale" in payload:
+                        scales = tuple(payload["scale"][bpos] for bpos in ex["bpos"])
+                else:
+                    send = payload["q"]
+                    scales = payload.get("scale")
+        if upto == "halo_publish":
+            return (send, scales), ef_new, stats
+
+        # -- collective: ship the payload.
+        with jax.named_scope("obs.halo_collective"):
             if self.method == "p2p":
+                recv, recv_s = [], []
+                for k, off in enumerate(self.p2p_offsets):
+                    perm = [(s, (s + off) % S) for s in range(S)]
+                    recv.append(jax.lax.ppermute(send[k], self.axis, perm))  # (P_d, ...)
+                    if scales is not None:
+                        recv_s.append(jax.lax.ppermute(scales[k], self.axis, perm))
+                got = (tuple(recv), tuple(recv_s) if scales is not None else None)
+            else:
+                pool = jax.lax.all_gather(send, self.axis)  # (S, Bmax, ...)
+                pool_s = (
+                    jax.lax.all_gather(scales, self.axis) if scales is not None else None
+                )
+                got = (pool, pool_s)
+        if upto == "halo_collective":
+            return got, ef_new, stats
+
+        # -- scatter: dequantize received rows into the halo slots.
+        with jax.named_scope("obs.halo_scatter"):
+            if self.method == "p2p":
+                bufs, sbufs = got
                 halo = jnp.zeros(
                     (self.halo_width,) + Theta_local.shape[1:], Theta_local.dtype
                 )
-                for off, snd, dst in zip(self.p2p_offsets, ex["send"], ex["dst"]):
-                    perm = [(s, (s + off) % S) for s in range(S)]
-                    recv = jax.lax.ppermute(Theta_local[snd], self.axis, perm)  # (P_d, p)
-                    halo = halo.at[dst].set(recv, mode="drop")  # sentinel Hmax drops padding
-                return jnp.concatenate([Theta_local, halo], axis=0), ef
-            send = Theta_local[ex["border"]]  # (Bmax, p)
-            pool = jax.lax.all_gather(send, self.axis)  # (S, Bmax, p)
-            halo = pool.reshape((-1,) + pool.shape[2:])[ex["halo_src"]]  # (Hmax, p)
-            return jnp.concatenate([Theta_local, halo], axis=0), ef
-
-        # Compressed wire: quantize the border pool once per slot — every
-        # reader receives the same dequantized copy — and ship the narrow
-        # payload through whichever collective the plan chose.
-        v = Theta_local[ex["border"]]  # (Bmax, p)
-        if ef is not None:
-            v = v + ef.astype(v.dtype)
-        payload, dq = self._quantize(v)
-        ef_new = (v - dq) if ef is not None else ef
-        if self.method == "p2p":
-            halo = jnp.zeros((self.halo_width,) + Theta_local.shape[1:], Theta_local.dtype)
-            for off, bpos, dst in zip(self.p2p_offsets, ex["bpos"], ex["dst"]):
-                perm = [(s, (s + off) % S) for s in range(S)]
-                rq = jax.lax.ppermute(payload["q"][bpos], self.axis, perm)  # (P_d, p) narrow
-                recv = rq.astype(Theta_local.dtype)
-                if "scale" in payload:
-                    rs = jax.lax.ppermute(payload["scale"][bpos], self.axis, perm)
-                    recv = recv * rs.astype(Theta_local.dtype)
-                halo = halo.at[dst].set(recv, mode="drop")
-            return jnp.concatenate([Theta_local, halo], axis=0), ef_new
-        pool_q = jax.lax.all_gather(payload["q"], self.axis)  # (S, Bmax, p) narrow
-        flat = pool_q.reshape((-1,) + pool_q.shape[2:])[ex["halo_src"]]
-        halo = flat.astype(Theta_local.dtype)
-        if "scale" in payload:
-            pool_s = jax.lax.all_gather(payload["scale"], self.axis)
-            halo = halo * pool_s.reshape((-1, 1))[ex["halo_src"]].astype(Theta_local.dtype)
-        return jnp.concatenate([Theta_local, halo], axis=0), ef_new
+                for k in range(len(self.p2p_offsets)):
+                    rows = bufs[k].astype(Theta_local.dtype)
+                    if sbufs is not None:
+                        rows = rows * sbufs[k].astype(Theta_local.dtype)
+                    # Sentinel dst Hmax drops padding rows.
+                    halo = halo.at[ex["dst"][k]].set(rows, mode="drop")
+            else:
+                pool, pool_s = got
+                flat = pool.reshape((-1,) + pool.shape[2:])[ex["halo_src"]]  # (Hmax, ...)
+                halo = flat.astype(Theta_local.dtype)
+                if pool_s is not None:
+                    halo = halo * pool_s.reshape((-1, 1))[ex["halo_src"]].astype(
+                        Theta_local.dtype
+                    )
+            Theta_ext = jnp.concatenate([Theta_local, halo], axis=0)
+        return Theta_ext, ef_new, stats
 
     def gather_rows(self, Theta_ext, idx_s, w_s, rows):
         """Neighbour sums for local ``rows`` from the extended array.

@@ -69,9 +69,10 @@ def sparse_mix(idx, w, theta, block_a=8, block_p=256, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     n, p = theta.shape
     bp = min(block_p, max(128, p))
-    t = _pad_to(theta, bp, 1)
-    out = _smk.sparse_mix(idx, w, t, block_a=block_a, block_p=bp, interpret=interpret)
-    return out[:, :p]
+    with jax.named_scope("obs.sparse_mix"):
+        t = _pad_to(theta, bp, 1)
+        out = _smk.sparse_mix(idx, w, t, block_a=block_a, block_p=bp, interpret=interpret)
+        return out[:, :p]
 
 
 @functools.partial(jax.jit, static_argnames=("limit", "clip", "block_b", "interpret"))
@@ -91,33 +92,34 @@ def fused_row_update(
     B = rows.shape[0]
     bb = min(8 if block_b is None else block_b, max(8, B))
     f32 = jnp.float32
-    # Pad the feature dim to one lane-aligned tile (the in-kernel gradient
-    # needs whole rows, so p is never split) and the row batch to a tile
-    # multiple with sentinel rows (computed, never scattered).
-    theta_p = _pad_to(theta.astype(f32), 128, 1)
-    Xp = _pad_to(_pad_to(X.astype(f32), 128, 2), 8, 1)
-    yp = _pad_to(y.astype(f32), 8, 1)
-    mp = _pad_to(mask.astype(f32), 8, 1)
-    rows_p = _pad_to(rows.astype(jnp.int32), bb, 0)
-    pad_b = rows_p.shape[0] - B
-    if pad_b:
-        rows_p = rows_p.at[B:].set(jnp.int32(limit))
-    idx_p = _pad_to(idx.astype(jnp.int32), bb, 0)
-    w_p = _pad_to(w.astype(f32), bb, 0)
-    coef_p = _pad_to(_pad_to(coef.astype(f32), 128, 1), bb, 0)
-    # Padded coef rows carry deg=0; set deg=1 so the sentinel rows' dead
-    # arithmetic stays finite (0/0 NaNs would trip debug-nan runs).
-    if pad_b:
-        coef_p = coef_p.at[B:, 1].set(1.0)
-    Xp = _pad_to(Xp, bb, 0)
-    yp = _pad_to(yp, bb, 0)
-    mp = _pad_to(mp, bb, 0)
-    noise_p = _pad_to(_pad_to(noise.astype(f32), 128, 1), bb, 0)
-    out = _frk.fused_row_update(
-        rows_p, idx_p, w_p, coef_p, Xp, yp, mp, noise_p, theta_p,
-        limit=limit, clip=clip, block_b=bb, interpret=interpret,
-    )
-    return out[:, :p]
+    with jax.named_scope("obs.fused_row_update"):
+        # Pad the feature dim to one lane-aligned tile (the in-kernel gradient
+        # needs whole rows, so p is never split) and the row batch to a tile
+        # multiple with sentinel rows (computed, never scattered).
+        theta_p = _pad_to(theta.astype(f32), 128, 1)
+        Xp = _pad_to(_pad_to(X.astype(f32), 128, 2), 8, 1)
+        yp = _pad_to(y.astype(f32), 8, 1)
+        mp = _pad_to(mask.astype(f32), 8, 1)
+        rows_p = _pad_to(rows.astype(jnp.int32), bb, 0)
+        pad_b = rows_p.shape[0] - B
+        if pad_b:
+            rows_p = rows_p.at[B:].set(jnp.int32(limit))
+        idx_p = _pad_to(idx.astype(jnp.int32), bb, 0)
+        w_p = _pad_to(w.astype(f32), bb, 0)
+        coef_p = _pad_to(_pad_to(coef.astype(f32), 128, 1), bb, 0)
+        # Padded coef rows carry deg=0; set deg=1 so the sentinel rows' dead
+        # arithmetic stays finite (0/0 NaNs would trip debug-nan runs).
+        if pad_b:
+            coef_p = coef_p.at[B:, 1].set(1.0)
+        Xp = _pad_to(Xp, bb, 0)
+        yp = _pad_to(yp, bb, 0)
+        mp = _pad_to(mp, bb, 0)
+        noise_p = _pad_to(_pad_to(noise.astype(f32), 128, 1), bb, 0)
+        out = _frk.fused_row_update(
+            rows_p, idx_p, w_p, coef_p, Xp, yp, mp, noise_p, theta_p,
+            limit=limit, clip=clip, block_b=bb, interpret=interpret,
+        )
+        return out[:, :p]
 
 
 # Woken-rows neighbour mix: Y[b] = sum_k w[b,k] theta[idx[b,k]] for (B, K)

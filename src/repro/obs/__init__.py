@@ -1,0 +1,43 @@
+"""``repro.obs`` — in-jit engine telemetry, phase tracing, run reports.
+
+Three layers, importable in any combination:
+
+* :mod:`repro.obs.metrics` — :class:`MetricsSpec` selects counter
+  groups; the engines carry the resulting metrics pytree through their
+  jit-scanned super-ticks (``EngineConfig(metrics=...)``), so
+  collection adds no host round-trips and leaves Theta bit-exact;
+* :mod:`repro.obs.trace` — :class:`SpanRecorder` + Chrome-trace export
+  and :func:`profile_supertick`, which attributes a super-tick's
+  wall-clock to its named phases by prefix differencing;
+* :mod:`repro.obs.report` — :class:`RunReport` (periodic metric drains
+  + phase rows, JSONL round-trip) and the ``python -m repro.obs.report``
+  CLI that renders summaries and merges ``obs_*`` rows into
+  ``BENCH_summary.json``.
+"""
+
+from repro.obs.metrics import (
+    ExchangeVolume,
+    MetricsAccumulator,
+    MetricsSpec,
+    summarize_counters,
+)
+from repro.obs.report import RunReport, merge_bench_summary
+from repro.obs.trace import (
+    PhaseProfile,
+    SpanRecorder,
+    profile_supertick,
+    validate_trace,
+)
+
+__all__ = [
+    "ExchangeVolume",
+    "MetricsAccumulator",
+    "MetricsSpec",
+    "PhaseProfile",
+    "RunReport",
+    "SpanRecorder",
+    "merge_bench_summary",
+    "profile_supertick",
+    "summarize_counters",
+    "validate_trace",
+]

@@ -43,7 +43,11 @@ class EngineConfig:
       fused Pallas kernel on TPU for f32 quadratic-loss updates at
       on-chip slab sizes (``REPRO_KERNEL_MAX_N``), ``True`` forces it
       (interpreted off-TPU; tests), ``False`` keeps the unfused
-      gather/mix/update/scatter ops.
+      gather/mix/update/scatter ops;
+    * ``metrics``: in-jit telemetry — a
+      :class:`repro.obs.MetricsSpec` selecting counter groups, ``True``
+      for the default spec, ``None``/``False`` (default) for no
+      collection. Metrics-on runs are bit-exact in Theta vs metrics-off.
 
     Placement / exchange (sharded engine only; ignored at S=1):
 
@@ -66,6 +70,7 @@ class EngineConfig:
     dtype: Any = jnp.float32
     steps_per_chunk: int = 16
     fused: Any = "auto"  # False | True | "auto"
+    metrics: Any = None  # MetricsSpec | True | False | None
     partition_mode: str = "degree"
     relabel: Any = None
     coords: Any = None
@@ -80,6 +85,12 @@ class EngineConfig:
     def exchange_spec(self) -> ExchangeSpec:
         """The coerced exchange spec (warns on deprecated bare strings)."""
         return ExchangeSpec.coerce(self.exchange)
+
+    def metrics_spec(self):
+        """The coerced telemetry spec (None = collection off, the default)."""
+        from repro.obs.metrics import MetricsSpec
+
+        return MetricsSpec.coerce(self.metrics)
 
     def replace(self, **overrides) -> "EngineConfig":
         """A copy with the given fields replaced (dataclasses.replace)."""

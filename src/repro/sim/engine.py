@@ -43,6 +43,7 @@ memory.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple
 
 import jax
@@ -54,6 +55,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.graph import as_csr, neighbor_counts
 from repro.core.mixing import kernel_max_n, sharded_mix_op
 from repro.core.spmd_compat import shard_map
+from repro.obs.metrics import ExchangeVolume, MetricsAccumulator
 from repro.sim import clocks
 from repro.sim.config import EngineConfig, resolve_config
 from repro.sim.partition import partition_graph
@@ -100,6 +102,8 @@ class SimState(NamedTuple):
     applied: jnp.ndarray  # scalar int32: updates actually scattered
     dropped: jnp.ndarray  # scalar int32: wakes lost to slot capacity
     messages: jnp.ndarray  # scalar f32: cumulative p-vectors transmitted
+    metrics: object = None  # telemetry pytree (None — empty — when
+    # EngineConfig.metrics is off; see repro.obs.metrics)
 
 
 @dataclasses.dataclass
@@ -115,6 +119,7 @@ class SimResult:
     active: np.ndarray  # final (n,) churn state
     update_state: object  # final LocalUpdate state (e.g. DP spend counts)
     state: SimState  # full engine state, resumable via ``run(state=...)``
+    report: object = None  # repro.obs.RunReport when run(metrics_every=) drained
 
 
 def _check_recordable(update, record_every: int) -> None:
@@ -127,11 +132,17 @@ def _check_recordable(update, record_every: int) -> None:
         )
 
 
-def _drive_slots(state, slots: int, stride: int, advance, on_record=None):
+def _drive_slots(state, slots: int, stride: int, advance, events=()):
     """Shared chunked driver for both engines: run ``slots`` super-ticks
     through ``advance(state, steps)`` in ``stride``-sized chunks, reusing
     a length-1 scan for the tail so only two scan lengths ever compile
-    (not one per remainder); ``on_record(state)`` fires after each chunk."""
+    (not one per remainder). ``events`` is a list of ``(every, callback)``
+    pairs; each callback fires with the state whenever the completed slot
+    count hits a multiple of its period (and once more at the end when
+    ``slots`` is not a multiple — a run always closes with a final
+    record/drain). ``stride`` must divide every period, or fire points
+    fall between chunks (callers pass the gcd)."""
+    events = [(int(every), cb) for every, cb in events if cb is not None and every > 0]
     done = 0
     while done < slots:
         steps = min(stride, slots - done)
@@ -141,9 +152,17 @@ def _drive_slots(state, slots: int, stride: int, advance, on_record=None):
             for _ in range(steps):
                 state = advance(state, 1)
         done += steps
-        if on_record is not None:
-            on_record(state)
+        for every, cb in events:
+            if done % every == 0 or done == slots:
+                cb(state)
     return state
+
+
+def _event_stride(events, default: int) -> int:
+    """The chunk stride serving ``(every, cb)`` events: gcd of the periods
+    (so every fire point lands on a chunk boundary), or ``default``."""
+    periods = [int(every) for every, cb in events if cb is not None and every > 0]
+    return math.gcd(*periods) if periods else default
 
 
 class AsyncEngine:
@@ -214,6 +233,24 @@ class AsyncEngine:
         else:
             self._fidx = self._fw = None
 
+        self.metrics_spec = cfg.metrics_spec()
+        self._macc = (
+            None
+            if self.metrics_spec is None
+            else MetricsAccumulator(
+                self.metrics_spec,
+                self.n,
+                churn=self._leave is not None,
+                straggler=self._drop is not None,
+                dp_limit=getattr(update, "planned_Ti", None),
+            )
+        )
+        if self.fused:
+            self._phases = ("wake_sample", "fused_row_update", "finalize")
+        else:
+            self._phases = ("wake_sample", "gather_mix", "row_update", "scatter", "finalize")
+        self._phase_cache: dict = {}
+
         self._chunk = jax.jit(self._chunk_impl, static_argnums=1)
         self._forced = jax.jit(self._slot_forced)
 
@@ -237,85 +274,127 @@ class AsyncEngine:
             applied=jnp.zeros((), jnp.int32),
             dropped=jnp.zeros((), jnp.int32),
             messages=jnp.zeros((), jnp.float32),
+            metrics=None if self._macc is None else self._macc.init(),
         )
 
     # -- one super-tick ----------------------------------------------------
-    def _slot(self, state: SimState, wake_mask) -> SimState:
+    def _slot(self, state: SimState, wake_mask, upto: str | None = None):
+        """One super-tick. ``upto`` cuts the pipeline after a named phase
+        and returns that phase's live intermediates — the prefix programs
+        :func:`repro.obs.profile_supertick` times; None runs the full slot."""
         n, B = self.n, self.batch_size
-        key, k_leave, k_rejoin, k_wake, k_strag, k_upd = jax.random.split(state.key, 6)
+        with jax.named_scope("obs.wake_sample"):
+            key, k_leave, k_rejoin, k_wake, k_strag, k_upd = jax.random.split(
+                state.key, 6
+            )
 
-        active = state.active
-        if wake_mask is None:
-            if self._leave is not None:
-                leave = jax.random.uniform(k_leave, (n,)) < jnp.asarray(
-                    self._leave, jnp.float32
-                )
-                rejoin = jax.random.uniform(k_rejoin, (n,)) < jnp.asarray(
-                    self._rejoin, jnp.float32
-                )
-                active = jnp.where(active, ~leave, rejoin)
-            wake = (
-                jax.random.uniform(k_wake, (n,))
-                < jnp.asarray(self.wake_probs, jnp.float32)
-            ) & active
-            if self._drop is not None:
-                wake &= jax.random.uniform(k_strag, (n,)) >= jnp.asarray(
-                    self._drop, jnp.float32
-                )
-        else:
-            # Forced wake sets (tests/diagnostics): no churn transition, no
-            # straggler losses — but departed agents still cannot wake.
-            wake = jnp.asarray(wake_mask, bool) & active
+            active_prev = state.active
+            active = active_prev
+            if wake_mask is None:
+                if self._leave is not None:
+                    leave = jax.random.uniform(k_leave, (n,)) < jnp.asarray(
+                        self._leave, jnp.float32
+                    )
+                    rejoin = jax.random.uniform(k_rejoin, (n,)) < jnp.asarray(
+                        self._rejoin, jnp.float32
+                    )
+                    active = jnp.where(active, ~leave, rejoin)
+                wake_pre = (
+                    jax.random.uniform(k_wake, (n,))
+                    < jnp.asarray(self.wake_probs, jnp.float32)
+                ) & active
+                wake = wake_pre
+                if self._drop is not None:
+                    wake = wake & (
+                        jax.random.uniform(k_strag, (n,))
+                        >= jnp.asarray(self._drop, jnp.float32)
+                    )
+            else:
+                # Forced wake sets (tests/diagnostics): no churn transition, no
+                # straggler losses — but departed agents still cannot wake.
+                wake = jnp.asarray(wake_mask, bool) & active
+                wake_pre = wake
 
-        total = wake.sum().astype(jnp.int32)
-        woken = jnp.nonzero(wake, size=B, fill_value=n)[0].astype(jnp.int32)
-        valid = woken < n
-        dropped = total - valid.sum().astype(jnp.int32)
+            total = wake.sum().astype(jnp.int32)
+            woken = jnp.nonzero(wake, size=B, fill_value=n)[0].astype(jnp.int32)
+            valid = woken < n
+            dropped = total - valid.sum().astype(jnp.int32)
+        if upto == "wake_sample":
+            return wake, woken, valid, dropped, active
 
         Theta = state.Theta
         if self.fused and self._delays is None:
-            # One Pallas launch: gather + mix + Eq. 4/6 + drop-mode scatter.
-            hist = state.hist
-            safe = jnp.minimum(woken, n - 1)
-            cols = jnp.asarray(self._fidx)[safe]  # (B, K)
-            ww = jnp.asarray(self._fw, jnp.float32)[safe]  # (B, K)
-            new_slab, applied, ustate = self.update.apply_fused(
-                Theta, woken, valid, k_upd, state.ustate, cols, ww
-            )
-            Theta = new_slab.astype(Theta.dtype)
-        else:
-            if self._delays is not None:
-                hist = state.hist.at[state.ptr % self.depth].set(Theta)
-                safe = jnp.minimum(woken, n - 1)
-                cols = jnp.asarray(self._idx)[safe]  # (B, K)
-                w = jnp.asarray(self._w, Theta.dtype)[safe]  # (B, K)
-                dly = jnp.asarray(self._delays)[safe]  # (B, K)
-                slots = jnp.mod(state.ptr - dly, self.depth)
-                vals = hist[slots, cols]  # (B, K, p)
-                neigh = jnp.einsum("bk,bkp->bp", w, vals)
-            else:
+            with jax.named_scope("obs.fused_row_update"):
+                # One Pallas launch: gather + mix + Eq. 4/6 + drop-mode scatter.
                 hist = state.hist
-                neigh = self.update.mix.gather_rows(Theta, woken)
+                safe = jnp.minimum(woken, n - 1)
+                cols = jnp.asarray(self._fidx)[safe]  # (B, K)
+                ww = jnp.asarray(self._fw, jnp.float32)[safe]  # (B, K)
+                new_slab, applied, ustate = self.update.apply_fused(
+                    Theta, woken, valid, k_upd, state.ustate, cols, ww
+                )
+                Theta = new_slab.astype(Theta.dtype)
+            if upto == "fused_row_update":
+                return Theta, applied
+        else:
+            with jax.named_scope("obs.gather_mix"):
+                if self._delays is not None:
+                    hist = state.hist.at[state.ptr % self.depth].set(Theta)
+                    safe = jnp.minimum(woken, n - 1)
+                    cols = jnp.asarray(self._idx)[safe]  # (B, K)
+                    w = jnp.asarray(self._w, Theta.dtype)[safe]  # (B, K)
+                    dly = jnp.asarray(self._delays)[safe]  # (B, K)
+                    slots = jnp.mod(state.ptr - dly, self.depth)
+                    vals = hist[slots, cols]  # (B, K, p)
+                    neigh = jnp.einsum("bk,bkp->bp", w, vals)
+                else:
+                    hist = state.hist
+                    neigh = self.update.mix.gather_rows(Theta, woken)
+            if upto == "gather_mix":
+                return neigh
 
-            new_rows, applied, ustate = self.update.apply(
-                Theta, woken, valid, neigh, k_upd, state.ustate
+            with jax.named_scope("obs.row_update"):
+                new_rows, applied, ustate = self.update.apply(
+                    Theta, woken, valid, neigh, k_upd, state.ustate
+                )
+            if upto == "row_update":
+                return new_rows, applied
+
+            with jax.named_scope("obs.scatter"):
+                tgt = jnp.where(applied, woken, n)
+                Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
+            if upto == "scatter":
+                return Theta
+
+        with jax.named_scope("obs.finalize"):
+            deg = jnp.asarray(self._deg_counts)[jnp.minimum(woken, n - 1)]
+            messages = state.messages + jnp.sum(jnp.where(applied, deg, 0.0))
+            metrics = state.metrics
+            if self._macc is not None:
+                metrics = self._macc.tick(
+                    metrics,
+                    ptr=state.ptr,
+                    wake_pre=wake_pre,
+                    wake=wake,
+                    applied=applied,
+                    woken=woken,
+                    capacity_dropped=dropped,
+                    active_prev=active_prev,
+                    active_new=active,
+                    dp_counts=ustate if self._macc.dp_limit is not None else None,
+                )
+            return SimState(
+                Theta=Theta,
+                hist=hist,
+                ptr=state.ptr + 1,
+                active=active,
+                key=key,
+                ustate=ustate,
+                applied=state.applied + applied.sum().astype(jnp.int32),
+                dropped=state.dropped + dropped,
+                messages=messages,
+                metrics=metrics,
             )
-            tgt = jnp.where(applied, woken, n)
-            Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
-
-        deg = jnp.asarray(self._deg_counts)[jnp.minimum(woken, n - 1)]
-        messages = state.messages + jnp.sum(jnp.where(applied, deg, 0.0))
-        return SimState(
-            Theta=Theta,
-            hist=hist,
-            ptr=state.ptr + 1,
-            active=active,
-            key=key,
-            ustate=ustate,
-            applied=state.applied + applied.sum().astype(jnp.int32),
-            dropped=state.dropped + dropped,
-            messages=messages,
-        )
 
     def _slot_forced(self, state: SimState, wake_mask) -> SimState:
         return self._slot(state, wake_mask)
@@ -326,6 +405,63 @@ class AsyncEngine:
 
         out, _ = jax.lax.scan(body, state, None, length=steps)
         return out
+
+    # -- observability -----------------------------------------------------
+    @property
+    def phase_names(self) -> tuple:
+        """The named super-tick phases, in pipeline order."""
+        return self._phases
+
+    def phase_program(self, upto: str | None = None):
+        """The jitted sampled slot cut after phase ``upto`` (None = full).
+
+        The prefix programs :func:`repro.obs.profile_supertick` times and
+        differences to attribute the super-tick's wall-clock phase by
+        phase; each returns the cut phase's live intermediates so XLA
+        cannot dead-code-eliminate the prefix.
+        """
+        if upto is not None and upto not in self._phases:
+            raise ValueError(f"unknown phase {upto!r} (have {self._phases})")
+        if upto not in self._phase_cache:
+            self._phase_cache[upto] = jax.jit(
+                lambda state: self._slot(state, None, upto=upto)
+            )
+        return self._phase_cache[upto]
+
+    def metrics_snapshot(self, state: SimState) -> tuple:
+        """Drain the device counters: ``(counters, derived)`` host dicts.
+
+        ``counters`` are the accumulated leaves (numpy); ``derived`` adds
+        host-computed values — the DP accountant's composed eps spend —
+        that need update-rule context the device counters don't carry.
+        """
+        if self._macc is None:
+            raise ValueError(
+                "metrics collection is off; construct the engine with "
+                "EngineConfig(metrics=True) (or a MetricsSpec)"
+            )
+        return self._macc.snapshot(state.metrics), self._derived_metrics(state.ustate)
+
+    def _derived_metrics(self, ustate) -> dict:
+        derived: dict = {}
+        if self.metrics_spec.privacy and hasattr(self.update, "eps_spent"):
+            eps = np.asarray(self.update.eps_spent(np.asarray(ustate)))
+            derived["dp_eps_spent_mean"] = float(eps.mean())
+            derived["dp_eps_spent_max"] = float(eps.max())
+        return derived
+
+    def report_meta(self) -> dict:
+        """Run metadata stamped into a :class:`repro.obs.RunReport`."""
+        return {
+            "engine": type(self).__name__,
+            "update": type(self.update).__name__,
+            "n": self.n,
+            "p": self.p,
+            "slot_wakes": float(self.config.slot_wakes),
+            "batch_size": int(self.batch_size),
+            "fused": bool(self.fused),
+            "dtype": str(jnp.dtype(self.dtype).name),
+        }
 
     # -- drivers -----------------------------------------------------------
     def step(self, state: SimState, wake_mask) -> SimState:
@@ -342,24 +478,51 @@ class AsyncEngine:
         slots: int,
         record_every: int = 0,
         state: SimState | None = None,
+        metrics_every: int = 0,
+        report=None,
     ) -> SimResult:
         """Drive ``slots`` super-ticks from ``Theta0`` (or a resumed state).
 
         ``record_every`` > 0 records the update's objective every that
         many slots (requires the update to expose ``objective``; asking
         for a recording the update cannot produce is an error, not a
-        silent no-op).
+        silent no-op). ``metrics_every`` > 0 drains the device metrics
+        every that many slots (requires collection on —
+        ``EngineConfig(metrics=...)``) into a :class:`repro.obs.RunReport`
+        returned as ``SimResult.report``; pass ``report=`` to keep
+        appending to an existing one across resumed runs.
         """
         _check_recordable(self.update, record_every)
+        if metrics_every > 0 and self._macc is None:
+            raise ValueError(
+                "metrics_every requires metrics collection on; construct the "
+                "engine with EngineConfig(metrics=True) (or a MetricsSpec)"
+            )
         state = self.init_state(Theta0) if state is None else state
         record = record_every > 0
         objective = [self.update.objective(state.Theta)] if record else None
+        if metrics_every > 0 and report is None:
+            from repro.obs.report import RunReport
+
+            report = RunReport(meta=self.report_meta())
+        events = []
+        if record:
+            events.append(
+                (record_every, lambda s: objective.append(self.update.objective(s.Theta)))
+            )
+        if metrics_every > 0:
+
+            def _drain(s):
+                counters, derived = self.metrics_snapshot(s)
+                report.add_snapshot(int(s.ptr), counters, derived)
+
+            events.append((metrics_every, _drain))
         state = _drive_slots(
             state,
             slots,
-            record_every if record else self.steps_per_chunk,
+            _event_stride(events, self.steps_per_chunk),
             self._chunk,
-            (lambda s: objective.append(self.update.objective(s.Theta))) if record else None,
+            events,
         )
         return SimResult(
             Theta=np.asarray(state.Theta),
@@ -371,6 +534,7 @@ class AsyncEngine:
             active=np.asarray(state.active),
             update_state=state.ustate,
             state=state,
+            report=report,
         )
 
 
@@ -394,6 +558,8 @@ class ShardedSimState(NamedTuple):
     ef: jnp.ndarray | None = None  # (S, Bmax, p) error-feedback accumulator
     # for the compressed halo exchange (None — an empty pytree — unless
     # the ExchangeSpec threads one)
+    metrics: object = None  # telemetry pytree, leaves stacked (S, ...)
+    # (None — empty — when EngineConfig.metrics is off)
 
 
 class _ShardStatic(NamedTuple):
@@ -411,6 +577,9 @@ class _ShardStatic(NamedTuple):
     w: jnp.ndarray  # (S, R, K) weights
     exchange: object  # pytree of stacked (S, ...) halo-exchange plan arrays
     consts: object  # pytree of (S, R, ...) per-agent constant tiles (None: update has none)
+    mstatic: object  # (S, ...) exchange-volume tiles for telemetry — per-shard
+    # border sizes differ, so they ride here, not as program constants
+    # (None: metrics off)
 
 
 class ShardedAsyncEngine:
@@ -576,6 +745,23 @@ class ShardedAsyncEngine:
                 a = a.astype(self.dtype)
             return jnp.asarray(part.pad_rows(a))
 
+        self.metrics_spec = cfg.metrics_spec()
+        if self.metrics_spec is None:
+            self._macc = None
+            mstatic = None
+        else:
+            vol = self._exchange_volume()
+            self._macc = MetricsAccumulator(
+                self.metrics_spec,
+                R,
+                churn=self._leave is not None,
+                straggler=self._drop is not None,
+                dp_limit=getattr(update, "planned_Ti", None),
+                exchange_offsets=vol.num_offsets if self.smix.method == "p2p" else 0,
+                quantized=self.smix.dtype != "f32",
+            )
+            mstatic = None if self._macc.exchange_offsets is None else vol.tiles()
+
         consts_fn = getattr(self.update, "agent_constants", None)
         consts_tiles = None if consts_fn is None else jax.tree.map(const_tile, consts_fn())
         self._static = _ShardStatic(
@@ -589,6 +775,7 @@ class ShardedAsyncEngine:
             w=jnp.asarray(part.w, self.dtype),
             exchange=jax.tree.map(jnp.asarray, self.smix.exchange_inputs()),
             consts=consts_tiles,
+            mstatic=mstatic,
         )
 
         # The sharded slab is the halo-extended block (R + Hmax rows) —
@@ -598,8 +785,39 @@ class ShardedAsyncEngine:
         )
         self._use_ef = self.smix.error_feedback
 
+        halo = ("wake_sample", "halo_publish", "halo_collective", "halo_scatter")
+        if self.fused:
+            self._phases = halo + ("fused_row_update", "finalize")
+        else:
+            self._phases = halo + ("gather_mix", "row_update", "scatter", "finalize")
+        self._phase_cache: dict = {}
+
         self._chunk = jax.jit(self._chunk_impl, static_argnums=2)
         self._forced = jax.jit(self._forced_impl)
+
+    def _exchange_volume(self) -> ExchangeVolume:
+        """Per-shard static wire volume of the configured halo exchange."""
+        part, S = self.part, self.num_shards
+        per_row = self.exchange_spec.payload_bytes_per_row(self.p)
+        if self.smix.method == "p2p":
+            widths = [int(d.shape[1]) for d in self.smix.p2p_dst]
+            rows = int(sum(widths))
+            if widths:
+                p2p_rows = np.tile(np.asarray(widths, np.int32)[None], (S, 1))
+                p2p_bytes = (p2p_rows * per_row).astype(np.float32)
+            else:
+                p2p_rows = p2p_bytes = None
+        else:
+            rows = int(self.smix.border.shape[1]) * (S - 1)
+            p2p_rows = p2p_bytes = None
+        rows_shipped = np.full(S, rows, np.int32)
+        return ExchangeVolume(
+            border_rows=np.asarray(part.border_sizes, np.int64).astype(np.int32),
+            rows_shipped=rows_shipped,
+            bytes_shipped=(rows_shipped * per_row).astype(np.float32),
+            p2p_rows=p2p_rows,
+            p2p_bytes=p2p_bytes,
+        )
 
     # -- state ------------------------------------------------------------
     def init_state(self, Theta0, seed: int | None = None) -> ShardedSimState:
@@ -631,39 +849,69 @@ class ShardedAsyncEngine:
             messages=jnp.zeros(S, jnp.float32),
             ptr=jnp.zeros(S, jnp.int32),
             ef=self.smix.init_error_feedback(self.p, self.dtype),
+            metrics=None
+            if self._macc is None
+            else jax.tree.map(
+                lambda a: jnp.tile(a[None], (S,) + (1,) * a.ndim), self._macc.init()
+            ),
         )
 
     # -- one shard-local super-tick ----------------------------------------
-    def _slot_local(self, state: ShardedSimState, static: _ShardStatic, wake_mask):
-        """One slot on one shard (arrays carry the local leading dim 1)."""
+    def _slot_local(
+        self, state: ShardedSimState, static: _ShardStatic, wake_mask, upto=None
+    ):
+        """One slot on one shard (arrays carry the local leading dim 1).
+
+        ``upto`` cuts the SPMD pipeline after a named phase and returns
+        that phase's live intermediates (without the leading shard dim —
+        :meth:`phase_program` re-wraps them); None runs the full slot.
+        """
         n, R, Bs = self.n, self.part.rows_per_shard, self.batch_size
-        key, k_leave, k_rejoin, k_wake, k_strag, k_upd = jax.random.split(
-            state.keys[0], 6
-        )
+        with jax.named_scope("obs.wake_sample"):
+            key, k_leave, k_rejoin, k_wake, k_strag, k_upd = jax.random.split(
+                state.keys[0], 6
+            )
 
-        active = state.active[0]
-        if wake_mask is None:
-            if self._leave is not None:
-                leave = jax.random.uniform(k_leave, (R,)) < static.leave[0]
-                rejoin = jax.random.uniform(k_rejoin, (R,)) < static.rejoin[0]
-                active = jnp.where(active, ~leave, rejoin)
-            wake = (jax.random.uniform(k_wake, (R,)) < static.wake_probs[0]) & active
-            if self._drop is not None:
-                wake &= jax.random.uniform(k_strag, (R,)) >= static.drop[0]
-        else:
-            # Forced wake sets: no churn transition, no straggler losses —
-            # but departed agents still cannot wake (AsyncEngine semantics).
-            wake = wake_mask[0] & active
+            active_prev = state.active[0]
+            active = active_prev
+            if wake_mask is None:
+                if self._leave is not None:
+                    leave = jax.random.uniform(k_leave, (R,)) < static.leave[0]
+                    rejoin = jax.random.uniform(k_rejoin, (R,)) < static.rejoin[0]
+                    active = jnp.where(active, ~leave, rejoin)
+                wake_pre = (
+                    jax.random.uniform(k_wake, (R,)) < static.wake_probs[0]
+                ) & active
+                wake = wake_pre
+                if self._drop is not None:
+                    wake = wake & (jax.random.uniform(k_strag, (R,)) >= static.drop[0])
+            else:
+                # Forced wake sets: no churn transition, no straggler losses —
+                # but departed agents still cannot wake (AsyncEngine semantics).
+                wake = wake_mask[0] & active
+                wake_pre = wake
 
-        total = wake.sum().astype(jnp.int32)
-        woken = jnp.nonzero(wake, size=Bs, fill_value=R)[0].astype(jnp.int32)
-        valid = woken < R
-        dropped = total - valid.sum().astype(jnp.int32)
+            total = wake.sum().astype(jnp.int32)
+            woken = jnp.nonzero(wake, size=Bs, fill_value=R)[0].astype(jnp.int32)
+            valid = woken < R
+            dropped = total - valid.sum().astype(jnp.int32)
+        if upto == "wake_sample":
+            return wake, woken, valid, dropped, active
 
         Theta = state.Theta[0]
         ex = jax.tree.map(lambda a: a[0], static.exchange)
         ef = state.ef[0] if self._use_ef else None
-        Theta_ext, ef_new = self.smix.exchange_halo(Theta, ex, ef)
+        collect_stats = self._macc is not None and self._macc.quantized
+        if upto in ("halo_publish", "halo_collective"):
+            out, _, _ = self.smix.exchange_halo(
+                Theta, ex, ef, upto=upto, collect_stats=collect_stats
+            )
+            return out
+        Theta_ext, ef_new, quant_stats = self.smix.exchange_halo(
+            Theta, ex, ef, collect_stats=collect_stats
+        )
+        if upto == "halo_scatter":
+            return Theta_ext
 
         safe = jnp.minimum(woken, R - 1)
         grows = jnp.where(valid, static.owned[0][safe], n)  # global ids, sentinel n
@@ -674,38 +922,73 @@ class ShardedAsyncEngine:
             else jax.tree.map(lambda t: t[0][safe], static.consts)
         )
         if self.fused:
-            # One Pallas launch over the halo-extended slab: gather + mix
-            # + Eq. 4/6 + scatter; owned rows [:R] come back updated.
-            cols = static.idx[0][safe]  # (B, K) extended-local indices
-            ww = jnp.asarray(static.w[0], jnp.float32)[safe]  # (B, K)
-            new_ext, applied, ustate = self.update.apply_fused(
-                Theta_ext, grows, valid, k_upd, ustate, cols, ww,
-                srows=woken, ssize=R, consts=consts_rows,
-            )
-            Theta = new_ext[:R].astype(Theta.dtype)
+            with jax.named_scope("obs.fused_row_update"):
+                # One Pallas launch over the halo-extended slab: gather + mix
+                # + Eq. 4/6 + scatter; owned rows [:R] come back updated.
+                cols = static.idx[0][safe]  # (B, K) extended-local indices
+                ww = jnp.asarray(static.w[0], jnp.float32)[safe]  # (B, K)
+                new_ext, applied, ustate = self.update.apply_fused(
+                    Theta_ext, grows, valid, k_upd, ustate, cols, ww,
+                    srows=woken, ssize=R, consts=consts_rows,
+                )
+                Theta = new_ext[:R].astype(Theta.dtype)
+            if upto == "fused_row_update":
+                return Theta, applied
         else:
-            neigh = self.smix.gather_rows(Theta_ext, static.idx[0], static.w[0], woken)
-            new_rows, applied, ustate = self.update.apply_rows(
-                Theta[safe], grows, valid, neigh, k_upd, ustate,
-                srows=woken, ssize=R, consts=consts_rows,
-            )
-            tgt = jnp.where(applied, woken, R)
-            Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
+            with jax.named_scope("obs.gather_mix"):
+                neigh = self.smix.gather_rows(
+                    Theta_ext, static.idx[0], static.w[0], woken
+                )
+            if upto == "gather_mix":
+                return neigh
+            with jax.named_scope("obs.row_update"):
+                new_rows, applied, ustate = self.update.apply_rows(
+                    Theta[safe], grows, valid, neigh, k_upd, ustate,
+                    srows=woken, ssize=R, consts=consts_rows,
+                )
+            if upto == "row_update":
+                return new_rows, applied
+            with jax.named_scope("obs.scatter"):
+                tgt = jnp.where(applied, woken, R)
+                Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
+            if upto == "scatter":
+                return Theta
 
-        messages = state.messages[0] + jnp.sum(
-            jnp.where(applied, static.deg[0][safe], 0.0)
-        )
-        return ShardedSimState(
-            Theta=Theta[None],
-            active=active[None],
-            keys=key[None],
-            ustate=jax.tree.map(lambda x: x[None], ustate),
-            applied=(state.applied[0] + applied.sum().astype(jnp.int32))[None],
-            dropped=(state.dropped[0] + dropped)[None],
-            messages=messages[None],
-            ptr=(state.ptr[0] + 1)[None],
-            ef=ef_new[None] if self._use_ef else None,
-        )
+        with jax.named_scope("obs.finalize"):
+            messages = state.messages[0] + jnp.sum(
+                jnp.where(applied, static.deg[0][safe], 0.0)
+            )
+            metrics = None
+            if self._macc is not None:
+                metrics = self._macc.tick(
+                    jax.tree.map(lambda a: a[0], state.metrics),
+                    ptr=state.ptr[0],
+                    wake_pre=wake_pre,
+                    wake=wake,
+                    applied=applied,
+                    woken=woken,
+                    capacity_dropped=dropped,
+                    active_prev=active_prev,
+                    active_new=active,
+                    dp_counts=ustate if self._macc.dp_limit is not None else None,
+                    exchange=None
+                    if static.mstatic is None
+                    else jax.tree.map(lambda a: a[0], static.mstatic),
+                    quant_stats=quant_stats,
+                )
+                metrics = jax.tree.map(lambda x: x[None], metrics)
+            return ShardedSimState(
+                Theta=Theta[None],
+                active=active[None],
+                keys=key[None],
+                ustate=jax.tree.map(lambda x: x[None], ustate),
+                applied=(state.applied[0] + applied.sum().astype(jnp.int32))[None],
+                dropped=(state.dropped[0] + dropped)[None],
+                messages=messages[None],
+                ptr=(state.ptr[0] + 1)[None],
+                ef=ef_new[None] if self._use_ef else None,
+                metrics=metrics,
+            )
 
     def _chunk_impl(self, state, static, steps: int):
         def local(state, static):
@@ -730,6 +1013,80 @@ class ShardedAsyncEngine:
             out_specs=P("shards"),
         )(state, static, wake_mask)
 
+    # -- observability -----------------------------------------------------
+    @property
+    def phase_names(self) -> tuple:
+        """The named super-tick phases, in SPMD pipeline order."""
+        return self._phases
+
+    def phase_program(self, upto: str | None = None):
+        """The jitted sampled slot cut after phase ``upto`` (None = full).
+
+        Same contract as :meth:`AsyncEngine.phase_program`; the cut runs
+        as the full ``shard_map`` program (collectives included), with
+        the static tiles passed as inputs — never closed over — so the
+        prefix measures what the real slot pays.
+        """
+        if upto is not None and upto not in self._phases:
+            raise ValueError(f"unknown phase {upto!r} (have {self._phases})")
+        if upto not in self._phase_cache:
+
+            def local(s, st):
+                out = self._slot_local(s, st, None, upto)
+                if upto is not None:
+                    out = jax.tree.map(lambda a: a[None], out)
+                return out
+
+            fn = jax.jit(
+                lambda state, static: shard_map(
+                    local,
+                    mesh=self.mesh,
+                    in_specs=(P("shards"), P("shards")),
+                    out_specs=P("shards"),
+                )(state, static)
+            )
+            self._phase_cache[upto] = lambda state: fn(state, self._static)
+        return self._phase_cache[upto]
+
+    def metrics_snapshot(self, state: ShardedSimState) -> tuple:
+        """Drain the device counters: ``(counters, derived)`` host dicts.
+
+        Counter leaves keep their leading (S,) shard axis (summaries
+        collapse it; per-shard burn-down stays visible); ``derived`` adds
+        the DP accountant's composed eps spend over the *owned* (unpadded)
+        agents.
+        """
+        if self._macc is None:
+            raise ValueError(
+                "metrics collection is off; construct the engine with "
+                "EngineConfig(metrics=True) (or a MetricsSpec)"
+            )
+        counters = self._macc.snapshot(state.metrics)
+        derived: dict = {}
+        if self.metrics_spec.privacy and hasattr(self.update, "eps_spent"):
+            counts = self.part.unpad_rows(np.asarray(state.ustate))
+            eps = np.asarray(self.update.eps_spent(counts))
+            derived["dp_eps_spent_mean"] = float(eps.mean())
+            derived["dp_eps_spent_max"] = float(eps.max())
+        return counters, derived
+
+    def report_meta(self) -> dict:
+        """Run metadata stamped into a :class:`repro.obs.RunReport`."""
+        return {
+            "engine": type(self).__name__,
+            "update": type(self.update).__name__,
+            "n": self.n,
+            "p": self.p,
+            "num_shards": int(self.num_shards),
+            "slot_wakes": float(self.config.slot_wakes),
+            "batch_size": int(self.batch_size),
+            "fused": bool(self.fused),
+            "dtype": str(jnp.dtype(self.dtype).name),
+            "exchange_method": self.exchange_method,
+            "exchange_dtype": self.smix.dtype,
+            "error_feedback": bool(self._use_ef),
+        }
+
     # -- drivers -----------------------------------------------------------
     def step(self, state: ShardedSimState, wake_mask) -> ShardedSimState:
         """One super-tick with an explicit global (n,) wake set."""
@@ -750,20 +1107,46 @@ class ShardedAsyncEngine:
         slots: int,
         record_every: int = 0,
         state: ShardedSimState | None = None,
+        metrics_every: int = 0,
+        report=None,
     ) -> SimResult:
         """Drive ``slots`` super-ticks; same contract as :meth:`AsyncEngine.run`."""
         _check_recordable(self.update, record_every)
+        if metrics_every > 0 and self._macc is None:
+            raise ValueError(
+                "metrics_every requires metrics collection on; construct the "
+                "engine with EngineConfig(metrics=True) (or a MetricsSpec)"
+            )
         state = self.init_state(Theta0) if state is None else state
         record = record_every > 0
         objective = [self.update.objective(self.global_theta(state))] if record else None
+        if metrics_every > 0 and report is None:
+            from repro.obs.report import RunReport
+
+            report = RunReport(meta=self.report_meta())
+        events = []
+        if record:
+            events.append(
+                (
+                    record_every,
+                    lambda s: objective.append(
+                        self.update.objective(self.global_theta(s))
+                    ),
+                )
+            )
+        if metrics_every > 0:
+
+            def _drain(s):
+                counters, derived = self.metrics_snapshot(s)
+                report.add_snapshot(int(np.asarray(s.ptr)[0]), counters, derived)
+
+            events.append((metrics_every, _drain))
         state = _drive_slots(
             state,
             slots,
-            record_every if record else self.steps_per_chunk,
+            _event_stride(events, self.steps_per_chunk),
             lambda s, steps: self._chunk(s, self._static, steps),
-            (lambda s: objective.append(self.update.objective(self.global_theta(s))))
-            if record
-            else None,
+            events,
         )
         part = self.part
         return SimResult(
@@ -778,4 +1161,5 @@ class ShardedAsyncEngine:
                 lambda x: part.unpad_rows(np.asarray(x)), state.ustate
             ),
             state=state,
+            report=report,
         )

@@ -408,6 +408,14 @@ class DPCDUpdate:
             self.eps_step, np.asarray(state), self.cfg.delta_bar
         )
 
+    def budget_stopped(self, state) -> int:
+        """Agents whose planned per-agent update budget T_i is exhausted.
+
+        The host-side ground truth the ``dp_budget_stopped`` telemetry
+        gauge is tested against (``tests/test_obs.py``).
+        """
+        return int((np.asarray(state) >= self.planned_Ti).sum())
+
     def objective(self, Theta) -> float:
         """Q(Theta) of Eq. 2 (used by ``record_every``)."""
         return float(self.obj.value(Theta))

@@ -1,0 +1,512 @@
+"""Observability layer: in-jit metrics, phase tracing, run reports.
+
+The load-bearing invariant is that telemetry is *free of side effects*:
+metrics-on must leave Theta bit-exact versus metrics-off under forced
+wakes, on both engines and both wire formats (the counters only
+re-reduce values the slot already computed — no extra PRNG draws, no
+Theta writes). On top of that: counter semantics against host-side
+ground truth (churn schedule, DP accountant), the phase profiler +
+Chrome-trace export, the report JSONL round-trip and CLI, the
+once-per-process ExchangeSpec string deprecation, and the
+BENCH_summary sync guard. Multi-shard (S=4) parity and counters run in
+an 8-host-device subprocess, ``test_spmd.py`` style."""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AgentData, DPConfig, knn_graph, make_objective
+from repro.obs import (
+    MetricsSpec,
+    RunReport,
+    SpanRecorder,
+    merge_bench_summary,
+    profile_supertick,
+    summarize_counters,
+    validate_trace,
+)
+from repro.sim import (
+    AsyncEngine,
+    CDUpdate,
+    ChurnConfig,
+    DPCDUpdate,
+    EngineConfig,
+    ExchangeSpec,
+    Scenario,
+    ShardedAsyncEngine,
+)
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _quad_problem(n, p=4, m=3, seed=0, mu=0.5, clip=None):
+    rng = np.random.default_rng(seed)
+    graph = knn_graph(rng.normal(size=(n, 8)), k=8)
+    targets = rng.normal(size=(n, p)) / np.sqrt(p)
+    X = rng.normal(size=(n, m, p)) / np.sqrt(p)
+    y = np.einsum("nmp,np->nm", X, targets)
+    data = AgentData(X=X, y=y, mask=np.ones((n, m)))
+    return make_objective(graph, data, "quadratic", mu=mu, mix_mode="sparse", clip=clip)
+
+
+# -- spec / config plumbing --------------------------------------------------
+
+
+def test_metrics_spec_coerce():
+    assert MetricsSpec.coerce(None) is None
+    assert MetricsSpec.coerce(False) is None
+    assert MetricsSpec.coerce(True) == MetricsSpec()
+    spec = MetricsSpec(staleness=False)
+    assert MetricsSpec.coerce(spec) is spec
+    with pytest.raises(TypeError):
+        MetricsSpec.coerce("yes")
+    assert EngineConfig(metrics=True).metrics_spec() == MetricsSpec()
+    assert EngineConfig().metrics_spec() is None
+
+
+def test_metrics_off_engine_refuses_snapshot_and_drain():
+    obj = _quad_problem(n=24)
+    eng = AsyncEngine(CDUpdate(obj), seed=0)
+    state = eng.init_state(np.zeros((obj.n, obj.p)))
+    with pytest.raises(ValueError, match="metrics"):
+        eng.metrics_snapshot(state)
+    with pytest.raises(ValueError, match="metrics"):
+        eng.run(np.zeros((obj.n, obj.p)), slots=2, metrics_every=1)
+
+
+# -- bit-exactness: metrics must not perturb the dynamics --------------------
+
+
+def test_async_forced_wakes_bit_exact_metrics_on_vs_off():
+    obj = _quad_problem(n=40, seed=1)
+    n, p = obj.n, obj.p
+    eng_off = AsyncEngine(CDUpdate(obj), slot_wakes=40.0, seed=0, dtype=jnp.float64)
+    eng_on = AsyncEngine(
+        CDUpdate(obj), slot_wakes=40.0, seed=0, dtype=jnp.float64, metrics=True
+    )
+    s_off = eng_off.init_state(np.zeros((n, p)))
+    s_on = eng_on.init_state(np.zeros((n, p)))
+    rng = np.random.default_rng(7)
+    total = 0
+    for _ in range(8):
+        mask = rng.random(n) < 0.3
+        total += int(mask.sum())
+        s_off = eng_off.step(s_off, mask)
+        s_on = eng_on.step(s_on, mask)
+    np.testing.assert_array_equal(np.asarray(s_off.Theta), np.asarray(s_on.Theta))
+    counters, _ = eng_on.metrics_snapshot(s_on)
+    # slot_wakes=n makes the batch cover every forced wake: nothing dropped,
+    # every realized wake applied, and each application binned by staleness.
+    assert int(counters["wakes_capacity_dropped"]) == 0
+    assert int(counters["wakes_realized"]) == total == int(s_on.applied)
+    assert int(counters["wakes_applied"]) == total
+    assert int(counters["staleness_hist"].sum()) == total
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [ExchangeSpec(), ExchangeSpec(method="all_gather", dtype="bf16", error_feedback=True)],
+    ids=["f32", "bf16_ef"],
+)
+def test_sharded_forced_wakes_bit_exact_metrics_on_vs_off(spec):
+    obj = _quad_problem(n=40, seed=2)
+    n, p = obj.n, obj.p
+    kw = dict(num_shards=1, slot_wakes=40.0, seed=0, exchange=spec)
+    eng_off = ShardedAsyncEngine(CDUpdate(obj), **kw)
+    eng_on = ShardedAsyncEngine(CDUpdate(obj), metrics=True, **kw)
+    s_off = eng_off.init_state(np.zeros((n, p)))
+    s_on = eng_on.init_state(np.zeros((n, p)))
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        mask = rng.random(n) < 0.3
+        s_off = eng_off.step(s_off, mask)
+        s_on = eng_on.step(s_on, mask)
+    np.testing.assert_array_equal(eng_off.global_theta(s_off), eng_on.global_theta(s_on))
+    counters, _ = eng_on.metrics_snapshot(s_on)
+    assert int(counters["wakes_applied"].sum()) == int(np.asarray(s_on.applied).sum())
+    if spec.dtype != "f32":
+        # The quantized wire reports its per-slot error energy (a gauge of
+        # the published-border quantization; exact value is wire-dependent,
+        # presence and finiteness are the contract).
+        assert np.isfinite(counters["quant_err_sq"]).all()
+
+
+def test_sampled_advance_bit_exact_metrics_on_vs_off():
+    obj = _quad_problem(n=48, seed=3)
+    n, p = obj.n, obj.p
+    scenario = Scenario(churn=ChurnConfig(leave_prob=0.05, rejoin_prob=0.3))
+    eng_off = AsyncEngine(CDUpdate(obj), slot_wakes=8.0, seed=5, scenario=scenario)
+    eng_on = AsyncEngine(
+        CDUpdate(obj), slot_wakes=8.0, seed=5, scenario=scenario, metrics=True
+    )
+    s_off = eng_off.advance(eng_off.init_state(np.zeros((n, p))), 9)
+    s_on = eng_on.advance(eng_on.init_state(np.zeros((n, p))), 9)
+    np.testing.assert_array_equal(np.asarray(s_off.Theta), np.asarray(s_on.Theta))
+    np.testing.assert_array_equal(np.asarray(s_off.active), np.asarray(s_on.active))
+
+
+# -- counter semantics vs host-side ground truth -----------------------------
+
+
+def test_churn_departures_match_schedule():
+    """A deterministic departure schedule (leave_prob=1 on a chosen subset,
+    no rejoins): the telemetry must count exactly those agents, once."""
+    obj = _quad_problem(n=40, seed=4)
+    n, p = obj.n, obj.p
+    leavers = np.zeros(n)
+    leavers[:17] = 1.0  # the schedule: agents 0..16 depart on slot 1
+    scenario = Scenario(churn=ChurnConfig(leave_prob=leavers, rejoin_prob=0.0))
+    eng = AsyncEngine(
+        CDUpdate(obj), slot_wakes=8.0, seed=0, scenario=scenario, metrics=True
+    )
+    state = eng.advance(eng.init_state(np.zeros((n, p))), 5)
+    counters, _ = eng.metrics_snapshot(state)
+    assert int(counters["churn_departures"]) == 17
+    assert int(counters["churn_rejoins"]) == 0
+    # Cross-check against the engine's own churn state.
+    assert int(np.asarray(state.active).sum()) == n - 17
+
+    engS = ShardedAsyncEngine(
+        CDUpdate(obj), num_shards=1, slot_wakes=8.0, seed=0,
+        scenario=scenario, metrics=True,
+    )
+    stS = engS.advance(engS.init_state(np.zeros((n, p))), 5)
+    countersS, _ = engS.metrics_snapshot(stS)
+    assert int(countersS["churn_departures"].sum()) == 17
+    assert int(countersS["churn_rejoins"].sum()) == 0
+
+
+def test_dp_budget_stopped_matches_accountant():
+    """The dp_budget_stopped gauge equals the host accountant's count, and
+    the derived eps-spent matches DPCDUpdate.eps_spent, on both engines."""
+    obj = _quad_problem(n=48, seed=3, clip=1.0)
+    n, p = obj.n, obj.p
+    planned_Ti = 3
+    dp = DPCDUpdate.plan(obj, DPConfig(eps_bar=1.0), planned_Ti=planned_Ti)
+    for eng in (
+        AsyncEngine(dp, slot_wakes=48.0, seed=0, metrics=True),
+        ShardedAsyncEngine(dp, num_shards=1, slot_wakes=48.0, seed=0, metrics=True),
+    ):
+        state = eng.init_state(np.zeros((n, p)))
+        for k in range(planned_Ti + 2):
+            state = eng.step(state, np.ones(n, bool))
+            counters, derived = eng.metrics_snapshot(state)
+            gauge = int(np.asarray(counters["dp_budget_stopped"]).sum())
+            ustate = state.ustate
+            if isinstance(eng, ShardedAsyncEngine):
+                ustate = eng.part.unpad_rows(np.asarray(ustate))
+            assert gauge == dp.budget_stopped(ustate), (type(eng).__name__, k)
+        # slot_wakes=n gives every forced wake batch room: after
+        # planned_Ti + 2 all-wake slots every agent has spent its budget.
+        assert gauge == n
+        np.testing.assert_allclose(
+            derived["dp_eps_spent_max"], dp.eps_spent(np.asarray(ustate)).max()
+        )
+
+
+def test_exchange_counters_accumulate_per_slot_volume():
+    """Sharded exchange counters advance by the partition's static
+    per-slot volume each super-tick (padded rows included: static shapes
+    ship them)."""
+    obj = _quad_problem(n=40, seed=6)
+    n, p = obj.n, obj.p
+    eng = ShardedAsyncEngine(
+        CDUpdate(obj), num_shards=1, slot_wakes=8.0, seed=0, metrics=True
+    )
+    steps = 4
+    state = eng.init_state(np.zeros((n, p)))
+    for _ in range(steps):
+        state = eng.step(state, np.ones(n, bool))
+    counters, _ = eng.metrics_snapshot(state)
+    xrows = eng.part.exchange_rows(eng.exchange_method)
+    xbytes = xrows * eng.exchange_spec.payload_bytes_per_row(p)
+    assert int(counters["exchange_rows"].sum()) == steps * xrows
+    assert float(counters["exchange_bytes"].sum()) == float(steps * xbytes)
+
+
+# -- phase tracing -----------------------------------------------------------
+
+
+def test_profile_supertick_and_trace_export(tmp_path):
+    obj = _quad_problem(n=32, seed=7)
+    eng = AsyncEngine(CDUpdate(obj), slot_wakes=8.0, seed=0, metrics=True)
+    recorder = SpanRecorder()
+    prof = profile_supertick(eng, inner=1, repeats=1, recorder=recorder)
+    assert tuple(prof.phases) == eng.phase_names
+    assert all(dt >= 0.0 for dt in prof.phases.values())
+    np.testing.assert_allclose(sum(prof.phases.values()), prof.total_s)
+    rows = prof.rows(prefix="obs_phase")
+    assert rows[-1][0] == "obs_phase_total"
+    trace = tmp_path / "trace.json"
+    recorder.export_chrome_trace(str(trace))
+    # live timing spans + one synthetic attribution span per phase
+    assert validate_trace(str(trace)) >= len(prof.phases)
+    events = json.loads(trace.read_text())["traceEvents"]
+    names = {e["name"] for e in events if e["tid"] == 1}
+    assert names == {f"obs.phase.{name}" for name in eng.phase_names}
+
+
+def test_validate_trace_rejects_malformed(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"no_events": 1}))
+    with pytest.raises(ValueError, match="Chrome trace"):
+        validate_trace(str(bad))
+    bad.write_text(json.dumps({"traceEvents": [{"ph": "X"}]}))
+    with pytest.raises(ValueError, match="malformed"):
+        validate_trace(str(bad))
+
+
+def test_phase_program_rejects_unknown_phase():
+    obj = _quad_problem(n=24, seed=8)
+    eng = AsyncEngine(CDUpdate(obj), seed=0)
+    with pytest.raises(ValueError, match="phase"):
+        eng.phase_program("not_a_phase")
+
+
+# -- run reports -------------------------------------------------------------
+
+
+def test_run_metrics_every_drains_and_reports():
+    obj = _quad_problem(n=40, seed=9)
+    n, p = obj.n, obj.p
+    eng = AsyncEngine(CDUpdate(obj), slot_wakes=8.0, seed=0, metrics=True)
+    res = eng.run(np.zeros((n, p)), slots=12, metrics_every=4, record_every=6)
+    assert len(res.report.snapshots) == 3
+    assert res.report.meta["engine"] == "AsyncEngine"
+    assert len(res.objective) == 3  # initial + record_every at slots 6, 12
+    # Drains are cumulative reads of the same accumulator: monotone.
+    applied = [s["counters"]["wakes_applied"] for s in res.report.snapshots]
+    assert applied == sorted(applied)
+    assert applied[-1] == int(np.asarray(res.state.applied).sum())
+    # And the drain must not perturb the dynamics.
+    plain = eng.run(np.zeros((n, p)), slots=12)
+    np.testing.assert_array_equal(plain.Theta, res.Theta)
+
+
+def test_report_jsonl_roundtrip_and_bench_rows(tmp_path):
+    report = RunReport(meta={"engine": "AsyncEngine", "n": 8})
+    report.add_snapshot(
+        2,
+        {"wakes_applied": np.int64(5), "staleness_hist": np.array([3, 2])},
+        derived={"dp_eps_spent_max": np.float64(0.5)},
+    )
+    report.add_phase_rows([("obs_phase_total", 12.5, "sum of phases")])
+    path = tmp_path / "report.jsonl"
+    report.to_jsonl(str(path))
+    back = RunReport.from_jsonl(str(path))
+    assert back.meta == {"engine": "AsyncEngine", "n": 8}
+    assert back.snapshots == report.snapshots
+    assert back.phase_rows == [("obs_phase_total", 12.5, "sum of phases")]
+    rows = dict((name, v) for name, v, _ in back.bench_rows())
+    assert rows["obs_wakes_applied"] == 5.0
+    assert rows["obs_phase_total"] == 12.5
+    assert "staleness_hist" not in rows  # vectors render in the table, not rows
+
+
+def test_report_cli_renders_merges_and_validates(tmp_path, capsys):
+    from repro.obs import report as report_cli
+
+    report = RunReport(meta={"engine": "AsyncEngine"})
+    report.add_snapshot(1, {"wakes_applied": np.int64(3)})
+    rpath = tmp_path / "r.jsonl"
+    report.to_jsonl(str(rpath))
+    recorder = SpanRecorder()
+    recorder.add("span", 0.0, 1.0)
+    tpath = tmp_path / "t.json"
+    recorder.export_chrome_trace(str(tpath))
+    bench = tmp_path / "BENCH_summary.json"
+    merge_bench_summary(str(bench), [("existing_row", 1.0, "kept")])
+
+    rc = report_cli.main(
+        [str(rpath), "--merge-bench", str(bench), "--validate-trace", str(tpath)]
+    )
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "wakes_applied" in out and "valid Chrome trace" in out
+    merged = json.loads(bench.read_text())
+    assert merged["obs_wakes_applied"]["us_per_call"] == 3.0
+    assert merged["existing_row"]["us_per_call"] == 1.0  # merge, not clobber
+
+    with pytest.raises(SystemExit):
+        report_cli.main([])  # nothing to do
+
+
+# -- satellites: warning dedup, bench sync, run.py CLI -----------------------
+
+
+def test_exchange_string_deprecation_warns_once_per_process():
+    import repro.core.mixing as mixing
+
+    obj = _quad_problem(n=24, seed=10)
+    mixing._warned_bare_exchange_string = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            ShardedAsyncEngine(CDUpdate(obj), num_shards=1, seed=0, exchange="p2p")
+    dep = [
+        w for w in caught
+        if issubclass(w.category, DeprecationWarning) and "bare string" in str(w.message)
+    ]
+    assert len(dep) == 1, [str(w.message) for w in caught]
+
+
+def _load_tool(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(REPO_ROOT, "tools", f"{name}.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_bench_sync(tmp_path):
+    sync = _load_tool("check_bench_sync")
+    root = tmp_path / "BENCH_summary.json"
+    results = tmp_path / "results" / "BENCH_summary.json"
+    results.parent.mkdir()
+    assert sync.check(root, results) == []  # neither exists: nothing to flag
+    root.write_text(json.dumps({"a": {"us_per_call": 1.0, "derived": ""}}))
+    errors = sync.check(root, results)
+    assert len(errors) == 1 and "counterpart" in errors[0]
+    results.write_text(root.read_text())
+    assert sync.check(root, results) == []
+    results.write_text(json.dumps({"a": {"us_per_call": 2.0, "derived": ""}}))
+    assert any("differs" in e for e in sync.check(root, results))
+    results.write_text(json.dumps({"b": {"us_per_call": 1.0, "derived": ""}}))
+    assert len(sync.check(root, results)) == 2  # 'a' and 'b' each one-sided
+
+
+def _run_benchrun(args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, [os.path.join(REPO_ROOT, "src"), env.get("PYTHONPATH", "")])
+    )
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *args],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=120,
+    )
+
+
+def test_benchmarks_run_list_and_unknown_only():
+    listed = _run_benchrun(["--list"])
+    assert listed.returncode == 0
+    names = listed.stdout.split()
+    assert "obs" in names and "sharded_engine" in names
+    bogus = _run_benchrun(["--only", "definitely_not_a_bench"])
+    assert bogus.returncode != 0
+    assert "definitely_not_a_bench" in bogus.stderr
+    for name in names:
+        assert name in bogus.stderr  # the error lists every valid name
+
+
+# -- multi-shard metrics: 8-host-device subprocess ---------------------------
+
+OBS_MULTIDEV_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np, jax.numpy as jnp
+    from repro.core import AgentData, DPConfig, knn_graph, make_objective
+    from repro.sim import (AsyncEngine, CDUpdate, DPCDUpdate, ExchangeSpec,
+                           ShardedAsyncEngine)
+
+    assert len(jax.devices()) == 8
+
+    def quad(n, p=4, m=3, seed=0, clip=None):
+        rng = np.random.default_rng(seed)
+        graph = knn_graph(rng.normal(size=(n, 8)), k=8)
+        targets = rng.normal(size=(n, p)) / np.sqrt(p)
+        X = rng.normal(size=(n, m, p)) / np.sqrt(p)
+        y = np.einsum("nmp,np->nm", X, targets)
+        data = AgentData(X=X, y=y, mask=np.ones((n, m)))
+        return make_objective(graph, data, "quadratic", mu=0.5,
+                              mix_mode="sparse", clip=clip)
+
+    # 1) S=4 forced-wake parity metrics-on vs metrics-off, f32 p2p and
+    #    the compressed bf16+EF wire; counters match host ground truth.
+    obj = quad(64, seed=1)
+    n, p = obj.n, obj.p
+    masks = [np.random.default_rng(5).random(n) < 0.3 for _ in range(6)]
+    for spec in (ExchangeSpec(method="p2p"),
+                 ExchangeSpec(method="p2p", dtype="bf16", error_feedback=True)):
+        kw = dict(num_shards=4, relabel="rcm", slot_wakes=64.0, seed=0,
+                  exchange=spec)
+        eng_off = ShardedAsyncEngine(CDUpdate(obj), **kw)
+        eng_on = ShardedAsyncEngine(CDUpdate(obj), metrics=True, **kw)
+        s_off = eng_off.init_state(np.zeros((n, p)))
+        s_on = eng_on.init_state(np.zeros((n, p)))
+        for mask in masks:
+            s_off = eng_off.step(s_off, mask)
+            s_on = eng_on.step(s_on, mask)
+        assert np.array_equal(eng_off.global_theta(s_off),
+                              eng_on.global_theta(s_on)), spec
+        counters, _ = eng_on.metrics_snapshot(s_on)
+        assert int(counters["wakes_applied"].sum()) == int(
+            np.asarray(s_on.applied).sum())
+        xrows = eng_on.part.exchange_rows(eng_on.exchange_method)
+        assert int(counters["exchange_rows"].sum()) == len(masks) * xrows
+        assert counters["p2p_rows_by_offset"].shape[-1] > 0
+        if spec.dtype != "f32":
+            assert np.isfinite(counters["quant_err_sq"]).all()
+    print("S4_PARITY_OK")
+
+    # 2) S=4 DP budget-stop gauge == host accountant.
+    objc = quad(48, seed=3, clip=1.0)
+    dp = DPCDUpdate.plan(objc, DPConfig(eps_bar=1.0), planned_Ti=3)
+    eng = ShardedAsyncEngine(dp, num_shards=4, relabel="rcm", slot_wakes=48.0,
+                             seed=0, metrics=True)
+    st = eng.init_state(np.zeros((objc.n, objc.p)))
+    for _ in range(5):
+        st = eng.step(st, np.ones(objc.n, bool))
+    counters, derived = eng.metrics_snapshot(st)
+    counts = eng.part.unpad_rows(np.asarray(st.ustate))
+    gauge = int(np.asarray(counters["dp_budget_stopped"]).sum())
+    assert gauge == dp.budget_stopped(counts) == objc.n, gauge
+    np.testing.assert_allclose(derived["dp_eps_spent_max"],
+                               dp.eps_spent(counts).max())
+    print("S4_DP_OK")
+
+    # 3) Drained run + phase profile + trace on the 8-shard engine: the
+    #    CI obs lane's in-test twin.
+    eng8 = ShardedAsyncEngine(CDUpdate(obj), num_shards=8, relabel="rcm",
+                              slot_wakes=16.0, seed=0, metrics=True)
+    res = eng8.run(np.zeros((n, p)), slots=6, metrics_every=3)
+    assert len(res.report.snapshots) == 2
+    from repro.obs import SpanRecorder, profile_supertick, validate_trace
+    rec = SpanRecorder()
+    prof = profile_supertick(eng8, state=res.state, inner=1, repeats=1,
+                             recorder=rec)
+    assert tuple(prof.phases) == eng8.phase_names
+    res.report.add_phase_rows(prof.rows())
+    rec.export_chrome_trace("obs_trace_test.json")
+    assert validate_trace("obs_trace_test.json") >= len(prof.phases)
+    res.report.to_jsonl("obs_report_test.jsonl")
+    from repro.obs import RunReport
+    back = RunReport.from_jsonl("obs_report_test.jsonl")
+    assert back.meta["num_shards"] == 8
+    print("S8_REPORT_OK")
+    """
+)
+
+
+def test_obs_multidevice_parity_counters_and_report(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    env.pop("JAX_ENABLE_X64", None)
+    res = subprocess.run(
+        [sys.executable, "-c", OBS_MULTIDEV_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=900, cwd=str(tmp_path),
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    for marker in ("S4_PARITY_OK", "S4_DP_OK", "S8_REPORT_OK"):
+        assert marker in res.stdout

@@ -1,0 +1,71 @@
+"""Check that the two BENCH_summary.json copies agree.
+
+``benchmarks/run.py`` writes the perf trajectory once under
+``results/BENCH_summary.json`` and copies it byte-identical to the repo
+root, where the perf-history tooling looks. This guard fails when the
+copies drift — e.g. someone hand-edits one, or a tool writes only one of
+them — comparing parsed JSON so formatting-only differences (which the
+copy step makes impossible anyway) do not mask a real divergence.
+Run from the repo root:
+
+    python tools/check_bench_sync.py
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT_COPY = Path("BENCH_summary.json")
+RESULTS_COPY = Path("results/BENCH_summary.json")
+
+
+def check(root_copy: Path = ROOT_COPY, results_copy: Path = RESULTS_COPY) -> list[str]:
+    """Return human-readable errors; empty when the copies are in sync."""
+    present = [p for p in (root_copy, results_copy) if p.exists()]
+    if not present:
+        # A fresh checkout before any bench ran has neither copy; nothing
+        # to compare, nothing to flag.
+        return []
+    if len(present) == 1:
+        return [f"{present[0]} exists but its counterpart does not"]
+    try:
+        a = json.loads(root_copy.read_text())
+        b = json.loads(results_copy.read_text())
+    except json.JSONDecodeError as e:
+        return [f"unparseable BENCH_summary.json: {e}"]
+    if a == b:
+        return []
+    ka, kb = set(a), set(b)
+    errors = []
+    for name in sorted(ka ^ kb):
+        where = root_copy if name in ka else results_copy
+        errors.append(f"entry {name!r} only in {where}")
+    for name in sorted(ka & kb):
+        if a[name] != b[name]:
+            errors.append(
+                f"entry {name!r} differs: {root_copy}={a[name]!r} "
+                f"{results_copy}={b[name]!r}"
+            )
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for err in errors:
+        print(f"bench-sync: {err}", file=sys.stderr)
+    if errors:
+        print(
+            "bench-sync: BENCH_summary.json and results/BENCH_summary.json have "
+            "drifted; re-run `python -m benchmarks.run` (it writes once and "
+            "copies) or copy the authoritative file over the stale one.",
+            file=sys.stderr,
+        )
+        return 1
+    print("bench-sync: BENCH_summary.json copies in sync")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
