@@ -1,0 +1,155 @@
+"""Dynamic-topology bench: patch vs rebuild, drift gauge, halo parity.
+
+The dynamic-topology layer's performance claim is that a Dada-style edge
+refresh should *not* pay for a full ``partition_graph`` rebuild every
+round: while the cut drifts little, :meth:`GraphPartition.patch` rebinds
+the halo tiles under frozen ownership. This bench measures that claim on
+a k-NN graph churned by one :class:`repro.sim.GraphUpdate` refresh:
+
+* ``dyntopo_refresh_s`` — the host-side edge-refresh round itself;
+* ``dyntopo_drift`` — the cut-fraction drift gauge the repartition
+  policy keys on (``EngineConfig.drift_threshold``);
+* ``dyntopo_patch_s`` / ``dyntopo_rebuild_s`` — rebinding the standing
+  partition vs cutting the new graph from scratch;
+* ``dyntopo_patch_speedup`` — rebuild time over patch time (> 1 is the
+  acceptance claim);
+* ``dyntopo_halo_parity`` — 1.0 after asserting the patched partition's
+  halo/exchange tiles equal a from-scratch cut of the new graph under
+  the same frozen layout (contiguous bounds + pinned order/tile width,
+  the configuration where the two are defined to coincide).
+
+Run standalone (single process, no devices needed — this is host-side
+partition machinery):
+
+    PYTHONPATH=src python -m benchmarks.bench_dynamic_topology --n 200000
+
+``benchmarks/run.py --only dynamic_topology`` merges every ``dyntopo_*``
+row into BENCH_summary.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _churned_graph(csr, refresh, Theta, rounds: int = 1):
+    """Apply ``rounds`` edge-refresh steps and return the final graph."""
+    for r in range(rounds):
+        csr = refresh.refresh(csr, Theta, round_index=r + 1)
+    return csr
+
+
+def _assert_halo_parity(base, patched, new_csr) -> None:
+    """Patched tiles must equal a from-scratch cut under the frozen layout.
+
+    The comparison pins everything :meth:`GraphPartition.patch` freezes by
+    construction — contiguous bounds (independent of edge weights), the
+    standing relabel order, and the (never-shrinking) tile width — so a
+    fresh ``partition_graph`` of the new graph is defined to coincide
+    field-for-field, point-to-point plan included.
+    """
+    from repro.sim import partition_graph
+
+    fresh = partition_graph(
+        new_csr,
+        base.num_shards,
+        mode="contiguous",
+        relabel=base.order,
+        tile_width=patched.tile_width,
+    )
+    pairs = [
+        ("halo", patched.halo, fresh.halo),
+        ("halo_sizes", patched.halo_sizes, fresh.halo_sizes),
+        ("halo_owner", patched.halo_owner, fresh.halo_owner),
+        ("border", patched.border, fresh.border),
+        ("border_sizes", patched.border_sizes, fresh.border_sizes),
+        ("halo_src", patched.halo_src, fresh.halo_src),
+        ("idx", patched.idx, fresh.idx),
+        ("w", patched.w, fresh.w),
+    ]
+    for name, a, b in pairs:
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise AssertionError(f"halo parity: field {name} diverged after patch()")
+    for name, a, b in zip(("offsets", "sends", "dsts"), patched.p2p_plan, fresh.p2p_plan):
+        eq = len(a) == len(b) and all(
+            np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
+        )
+        if not eq:
+            raise AssertionError(f"halo parity: p2p plan {name} diverged after patch()")
+
+
+def run(n: int = 200_000, shards: int = 8, k: int = 10, seed: int = 0, verbose=True):
+    """Measure patch-vs-rebuild on one refresh round; return CSV rows."""
+    from repro.core import random_geometric_graph
+    from repro.sim import GraphUpdate, partition_graph
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    # Random geometric graph: O(n) memory, same constructor the sharded
+    # engine benches scale with (quadratic k-NN build would dominate the
+    # partition timings this bench is actually about).
+    csr = random_geometric_graph(n, rng, avg_degree=float(k))
+    graph_s = time.time() - t0
+
+    t0 = time.time()
+    part = partition_graph(csr, shards, mode="degree", relabel="rcm")
+    build_s = time.time() - t0
+
+    refresh = GraphUpdate(every=1, k=k, candidates=4, gamma=4.0, seed=seed)
+    Theta = rng.normal(size=(n, 8))
+    t0 = time.time()
+    new_csr = _churned_graph(csr, refresh, Theta)
+    refresh_s = time.time() - t0
+
+    drift = part.drift(new_csr)
+    t0 = time.time()
+    patched = part.patch(new_csr)
+    patched.p2p_plan  # the plan is part of what a swap rebinds — time it
+    patch_s = time.time() - t0
+    t0 = time.time()
+    rebuilt = partition_graph(new_csr, shards, mode="degree", relabel="rcm")
+    rebuilt.p2p_plan
+    rebuild_s = time.time() - t0
+    assert rebuilt.n == patched.n
+
+    # Halo parity runs on a contiguous-mode base: patch() freezes the
+    # block bounds, and only contiguous bounds are weight-independent —
+    # the configuration where patched and from-scratch coincide exactly.
+    cbase = partition_graph(csr, shards, mode="contiguous", relabel="rcm")
+    _assert_halo_parity(cbase, cbase.patch(new_csr), new_csr)
+
+    rows = [
+        ("dyntopo_graph_build", graph_s, f"random_geometric_graph n={n} deg~{k}"),
+        ("dyntopo_partition_build", build_s, f"S={shards} mode=degree relabel=rcm"),
+        ("dyntopo_refresh_s", refresh_s, "GraphUpdate round with 4 candidates/row"),
+        ("dyntopo_drift", drift, "cut-fraction drift gauge after one refresh"),
+        ("dyntopo_patch_s", patch_s, "GraphPartition.patch + p2p plan rebind"),
+        ("dyntopo_rebuild_s", rebuild_s, "full partition_graph + p2p plan"),
+        ("dyntopo_patch_speedup", rebuild_s / max(patch_s, 1e-9),
+         "rebuild_s / patch_s (>1 = patch cheaper)"),
+        ("dyntopo_halo_parity", 1.0,
+         "patched tiles == from-scratch cut under frozen layout (asserted)"),
+    ]
+    if verbose:
+        for name, v, note in rows:
+            print(f"{name},{v:.4g},{note}")
+    return rows
+
+
+def main(argv=None):
+    """CLI entry point (host-side only; no device mesh required)."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    run(n=args.n, shards=args.shards, k=args.k, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -197,11 +197,30 @@ def _bench_obs(full, rows, record):
     record("obs", t0, f"n={kw['n']},shards=8,overhead_pct={over:.3g}")
 
 
+def _bench_dynamic_topology(full, rows, record):
+    from benchmarks import bench_dynamic_topology
+
+    t0 = time.time()
+    kw = dict(n=200_000, shards=8) if full else dict(n=20_000, shards=8)
+    dt = bench_dynamic_topology.run(verbose=False, **kw)
+    # Host-side partition machinery: patch-vs-rebuild timings, the drift
+    # gauge, and the (asserted) halo parity row all join the summary.
+    rows.extend(dt)
+    speedup = next(v for name, v, _ in dt if name == "dyntopo_patch_speedup")
+    record("dynamic_topology", t0, f"n={kw['n']},patch_speedup={speedup:.3g}")
+
+
 def _bench_roofline(full, rows, record):
     from benchmarks import bench_roofline
 
     t0 = time.time()
     rs = bench_roofline.run()
+    if not rs:
+        # No dry-run output on this backend/config: say so and record
+        # nothing, instead of emitting an empty "0 dry-run rows" row
+        # into BENCH_summary.json that reads like a measurement.
+        print("roofline: skipped (no dry-run rows on this backend)")
+        return
     record("roofline", t0, f"{len(rs)} dry-run rows")
 
 
@@ -217,6 +236,7 @@ BENCHES = {
     "async_engine": _bench_async_engine,
     "sharded_engine": _bench_sharded_engine,
     "obs": _bench_obs,
+    "dynamic_topology": _bench_dynamic_topology,
     "roofline": _bench_roofline,
 }
 

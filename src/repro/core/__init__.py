@@ -19,6 +19,7 @@ from repro.core.graph import (
     random_geometric_graph,
     ring_graph,
     sparse_crossover,
+    TopologyState,
 )
 from repro.core.mixing import MixOp, mix_op
 from repro.core.objective import (

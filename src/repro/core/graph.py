@@ -37,6 +37,13 @@ import os
 
 import numpy as np
 
+try:  # TopologyState's in-jit ops need jax; everything else is numpy-only.
+    import jax as _jax
+    import jax.numpy as _jnp
+except ImportError:  # pragma: no cover - the container always has jax
+    _jax = None
+    _jnp = None
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class AgentGraph:
@@ -125,8 +132,20 @@ def angular_similarity_graph(
     return AgentGraph(w)
 
 
-def knn_cosine_graph(features: np.ndarray, k: int = 10) -> AgentGraph:
+def knn_cosine_graph(
+    features: np.ndarray,
+    k: int = 10,
+    block_rows: int | None = None,
+    sparse: bool = False,
+) -> AgentGraph | "CSRGraph":
     """Paper Sec. 5.2: unit weight iff i in kNN(j) or j in kNN(i), cosine sim.
+
+    The similarity computation streams in (block_rows, n) slabs — the
+    dense (n, n) cosine matrix is never materialized, so the top-k
+    selection scales past ~50k agents. The default return type is the
+    historical dense :class:`AgentGraph` (itself (n, n) — fine for the
+    small-n paper experiments); pass ``sparse=True`` to get the same
+    graph as a :class:`CSRGraph` with O(n * k) storage end to end.
 
     ``k`` is clamped to ``n - 1``: with fewer than k candidate peers,
     everyone is a neighbour (the paper's semantics), instead of
@@ -136,16 +155,27 @@ def knn_cosine_graph(features: np.ndarray, k: int = 10) -> AgentGraph:
     n = f.shape[0]
     k = min(k, n - 1)
     if k <= 0:
+        if sparse:
+            return csr_from_coo(n, [], [], [])
         return AgentGraph(np.zeros((n, n), dtype=np.float64))
     norms = np.linalg.norm(f, axis=1, keepdims=True)
     norms = np.where(norms == 0.0, 1.0, norms)
     unit = f / norms
-    sim = unit @ unit.T
-    np.fill_diagonal(sim, -np.inf)
+    if block_rows is None:
+        block_rows = max(1, min(4096, (1 << 25) // max(n, 1)))
+    rows = np.empty(n * k, dtype=np.int64)
+    cols = np.empty(n * k, dtype=np.int64)
+    for lo in range(0, n, block_rows):
+        hi = min(lo + block_rows, n)
+        sim = unit[lo:hi] @ unit.T  # (b, n) slab
+        sim[np.arange(hi - lo), np.arange(lo, hi)] = -np.inf
+        nn = np.argpartition(-sim, k, axis=1)[:, :k]
+        rows[lo * k : hi * k] = np.repeat(np.arange(lo, hi), k)
+        cols[lo * k : hi * k] = nn.ravel()
+    if sparse:
+        return csr_from_coo(n, rows, cols, np.ones(n * k), symmetrize=True)
     w = np.zeros((n, n), dtype=np.float64)
-    for i in range(n):
-        nn = np.argpartition(-sim[i], k)[:k]
-        w[i, nn] = 1.0
+    w[rows, cols] = 1.0
     w = np.maximum(w, w.T)  # i in kNN(j) OR j in kNN(i)
     np.fill_diagonal(w, 0.0)
     return AgentGraph(w)
@@ -384,6 +414,236 @@ def csr_from_coo(
     indptr = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(np.bincount(rows, minlength=n), out=indptr[1:])
     return CSRGraph(indptr=indptr, indices=cols.astype(np.int32), data=vals)
+
+
+# ---------------------------------------------------------------------------
+# Mutable, versioned topology (capacity-padded slot form)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TopologyState:
+    """Mutable, versioned topology backing a :class:`CSRGraph`.
+
+    Each row holds ``capacity`` neighbour *slots*: ``nbr[i, s]`` is the
+    neighbour id (the row's own index where the slot is free — always an
+    in-bounds gather), ``w[i, s]`` its weight (0 where invalid) and
+    ``valid[i, s]`` whether the slot holds a live edge. Because every
+    array keeps a static (n, capacity) shape, edge *weight* updates and
+    edge activate/deactivate are pure jnp scatters — usable inside jit
+    with traced operands and no retrace. Structural changes that exceed a
+    row's capacity go through the host-side :meth:`apply_edge_updates`,
+    which rebuilds (and, if needed, grows) the slot arrays.
+
+    ``version`` is a 0-d int32 *array* (not a Python int) so functional
+    in-jit updates can bump it without leaving the traced world; it is
+    the cheap "did topology change" probe engines key their re-tile /
+    re-partition decisions on.
+
+    Instances are registered as a jax pytree (children: nbr, w, valid,
+    version) and are functionally updated — every mutator returns a new
+    ``TopologyState``. Symmetry is maintained by construction: all three
+    in-jit mutators apply each (i, j) pair in both directions. Batches
+    must not repeat a row within one :meth:`activate_edges` call (two
+    activations racing for the same free slot collide); the host path
+    has no such restriction.
+    """
+
+    nbr: np.ndarray  # (n, capacity) int32, own index where invalid
+    w: np.ndarray  # (n, capacity) float, 0 where invalid
+    valid: np.ndarray  # (n, capacity) bool
+    version: np.ndarray  # () int32
+
+    @property
+    def n(self) -> int:
+        return self.nbr.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.nbr.shape[1]
+
+    @classmethod
+    def from_csr(
+        cls,
+        csr: CSRGraph,
+        capacity: int | None = None,
+        slack: int = 0,
+        version: int = 0,
+    ) -> "TopologyState":
+        """Slot form of ``csr``; ``capacity`` defaults to max degree + slack."""
+        need = max(csr.max_degree(), 1)
+        if capacity is None:
+            capacity = need + max(slack, 0)
+        if capacity < need:
+            raise ValueError(f"capacity={capacity} < max degree {need}")
+        idx, w = csr.padded_neighbors(pad_to=capacity)
+        deg = np.diff(csr.indptr)
+        valid = np.arange(capacity)[None, :] < deg[:, None]
+        return cls(
+            nbr=idx,
+            w=w,
+            valid=valid,
+            version=np.asarray(version, dtype=np.int32),
+        )
+
+    def to_csr(self) -> CSRGraph:
+        """Host-side CSR snapshot of the live edge set."""
+        nbr = np.asarray(self.nbr)
+        w = np.asarray(self.w)
+        valid = np.asarray(self.valid)
+        r, s = np.nonzero(valid)
+        return csr_from_coo(self.n, r, nbr[r, s], w[r, s], symmetrize=True)
+
+    def degrees(self):
+        """Weighted degrees D_ii = sum_j W_ij (w is 0 at invalid slots)."""
+        return self.w.sum(axis=1)
+
+    def neighbor_counts(self):
+        """|N_i| per row — live slots only."""
+        return self.valid.sum(axis=1)
+
+    def _directed(self, rows, cols, fn):
+        """Apply ``fn(state, rows, cols) -> (nbr, w, valid)`` both ways."""
+        nbr = _jnp.asarray(self.nbr)
+        w = _jnp.asarray(self.w)
+        valid = _jnp.asarray(self.valid)
+        nbr, w, valid = fn(nbr, w, valid, rows, cols)
+        nbr, w, valid = fn(nbr, w, valid, cols, rows)
+        return dataclasses.replace(
+            self, nbr=nbr, w=w, valid=valid, version=self.version + 1
+        )
+
+    def _find_slot(self, nbr, valid, rows, cols):
+        """(slot, found) of the live slot holding cols in rows' lists."""
+        hit = (nbr[rows] == cols[:, None]) & valid[rows]
+        return _jnp.argmax(hit, axis=1), hit.any(axis=1)
+
+    def _flat(self, rows, slot, ok):
+        """Flat (n * capacity) scatter index; sentinel (dropped) where !ok."""
+        cap = self.capacity
+        return _jnp.where(ok, rows * cap + slot, self.n * cap)
+
+    def with_edge_weights(self, rows, cols, vals) -> "TopologyState":
+        """Set weights of existing edges (i, j) — in-jit, shape-preserving.
+
+        Pairs that are not currently live edges are ignored (no
+        activation happens here); weights are applied symmetrically.
+        """
+        rows = _jnp.asarray(rows, _jnp.int32)
+        cols = _jnp.asarray(cols, _jnp.int32)
+        vals = _jnp.asarray(vals, self.w.dtype)
+
+        def set_w(nbr, w, valid, r, c):
+            slot, found = self._find_slot(nbr, valid, r, c)
+            flat = self._flat(r, slot, found)
+            w = w.ravel().at[flat].set(vals, mode="drop").reshape(w.shape)
+            return nbr, w, valid
+
+        return self._directed(rows, cols, set_w)
+
+    def deactivate_edges(self, rows, cols) -> "TopologyState":
+        """Remove edges (i, j) — in-jit; slots free for later activation."""
+        rows = _jnp.asarray(rows, _jnp.int32)
+        cols = _jnp.asarray(cols, _jnp.int32)
+
+        def drop(nbr, w, valid, r, c):
+            slot, found = self._find_slot(nbr, valid, r, c)
+            flat = self._flat(r, slot, found)
+            w = w.ravel().at[flat].set(0.0, mode="drop").reshape(w.shape)
+            valid = (
+                valid.ravel().at[flat].set(False, mode="drop").reshape(valid.shape)
+            )
+            return nbr, w, valid
+
+        return self._directed(rows, cols, drop)
+
+    def activate_edges(self, rows, cols, vals) -> "TopologyState":
+        """Add (or reweight) edges (i, j) — in-jit, within row capacity.
+
+        An existing slot already holding j (live or freed) is reused;
+        otherwise the first free slot is claimed. Rows with no free slot
+        silently drop the activation — capacity growth is the host-side
+        :meth:`apply_edge_updates` path. At most one activation per row
+        per call (including the mirrored direction).
+        """
+        rows = _jnp.asarray(rows, _jnp.int32)
+        cols = _jnp.asarray(cols, _jnp.int32)
+        vals = _jnp.asarray(vals, self.w.dtype)
+
+        def add(nbr, w, valid, r, c):
+            hit = nbr[r] == c[:, None]  # reuse a matching slot, even freed
+            slot_hit = _jnp.argmax(hit, axis=1)
+            found = hit.any(axis=1)
+            free = ~valid[r]
+            slot_free = _jnp.argmax(free, axis=1)
+            has_free = free.any(axis=1)
+            slot = _jnp.where(found, slot_hit, slot_free)
+            ok = found | has_free
+            flat = self._flat(r, slot, ok)
+            nbr = nbr.ravel().at[flat].set(c, mode="drop").reshape(nbr.shape)
+            w = w.ravel().at[flat].set(vals, mode="drop").reshape(w.shape)
+            valid = (
+                valid.ravel().at[flat].set(True, mode="drop").reshape(valid.shape)
+            )
+            return nbr, w, valid
+
+        return self._directed(rows, cols, add)
+
+    def apply_edge_updates(
+        self,
+        add_rows=(),
+        add_cols=(),
+        add_vals=(),
+        remove_rows=(),
+        remove_cols=(),
+        slack: int = 0,
+    ) -> "TopologyState":
+        """Host-side structural update — handles beyond-capacity growth.
+
+        Removes then adds the given (i, j) pairs (symmetrically, duplicates
+        collapse by max weight) and rebuilds the slot arrays. When the new
+        max degree exceeds the current capacity, capacity grows to the
+        next multiple of 8 (so repeated growth retraces downstream jit
+        programs a bounded number of times); it never shrinks. The version
+        counter advances by one.
+        """
+        nbr = np.asarray(self.nbr)
+        wts = np.asarray(self.w)
+        valid = np.asarray(self.valid)
+        r, s = np.nonzero(valid)
+        rows, cols, vals = r, nbr[r, s], wts[r, s]
+        if len(np.asarray(remove_rows)):
+            rr = np.asarray(remove_rows, dtype=np.int64)
+            rc = np.asarray(remove_cols, dtype=np.int64)
+            drop_keys = np.concatenate([rr * self.n + rc, rc * self.n + rr])
+            keep = ~np.isin(rows * self.n + cols, drop_keys)
+            rows, cols, vals = rows[keep], cols[keep], vals[keep]
+        if len(np.asarray(add_rows)):
+            rows = np.concatenate([rows, np.asarray(add_rows, dtype=np.int64)])
+            cols = np.concatenate([cols, np.asarray(add_cols, dtype=np.int64)])
+            vals = np.concatenate([vals, np.asarray(add_vals, dtype=np.float64)])
+        csr = csr_from_coo(self.n, rows, cols, vals, symmetrize=True, dedupe="max")
+        need = max(csr.max_degree(), 1) + max(slack, 0)
+        capacity = self.capacity
+        if need > capacity:
+            capacity = ((need + 7) // 8) * 8
+        return type(self).from_csr(
+            csr, capacity=capacity, version=int(np.asarray(self.version)) + 1
+        )
+
+
+if _jax is not None:
+
+    def _topology_flatten(t: TopologyState):
+        return (t.nbr, t.w, t.valid, t.version), None
+
+    def _topology_unflatten(_, children):
+        nbr, w, valid, version = children
+        return TopologyState(nbr=nbr, w=w, valid=valid, version=version)
+
+    _jax.tree_util.register_pytree_node(
+        TopologyState, _topology_flatten, _topology_unflatten
+    )
 
 
 def neighbor_counts(graph) -> np.ndarray:

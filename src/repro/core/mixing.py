@@ -310,6 +310,26 @@ class ShardedMixOp:
         """R: padded rows per shard."""
         return self.idx.shape[1]
 
+    def rebound(self, partition) -> "ShardedMixOp":
+        """This operator rebuilt against a patched/repartitioned partition.
+
+        The exchange *method* is pinned to this operator's already
+        resolved choice (never re-run through ``"auto"``), so a
+        dynamic-topology engine keeps a stable program structure across
+        :meth:`repro.sim.partition.GraphPartition.patch` rebinds — only
+        the plan arrays change. Wire dtype and error-feedback threading
+        carry over unchanged.
+        """
+        return sharded_mix_op(
+            partition,
+            axis=self.axis,
+            exchange=ExchangeSpec(
+                method=self.method,
+                dtype=self.dtype,
+                error_feedback=self.error_feedback,
+            ),
+        )
+
     def exchange_inputs(self):
         """The stacked (S, ...) plan arrays the chosen method consumes.
 

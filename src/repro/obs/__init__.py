@@ -16,10 +16,12 @@ Three layers, importable in any combination:
 """
 
 from repro.obs.metrics import (
+    TOPOLOGY_COUNTERS,
     ExchangeVolume,
     MetricsAccumulator,
     MetricsSpec,
     summarize_counters,
+    topology_log_init,
 )
 from repro.obs.report import RunReport, merge_bench_summary
 from repro.obs.trace import (
@@ -30,6 +32,7 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "TOPOLOGY_COUNTERS",
     "ExchangeVolume",
     "MetricsAccumulator",
     "MetricsSpec",
@@ -39,5 +42,6 @@ __all__ = [
     "merge_bench_summary",
     "profile_supertick",
     "summarize_counters",
+    "topology_log_init",
     "validate_trace",
 ]

@@ -288,6 +288,28 @@ class MetricsAccumulator:
         return {k: np.asarray(v) for k, v in m.items() if k != "last_wake"}
 
 
+# Host-side dynamic-topology counters. Unlike the in-jit groups above,
+# topology changes happen between chunks on the host (edge refreshes,
+# arrivals, partition patches), so the engines keep a plain dict and
+# merge it into the ``derived`` side of ``metrics_snapshot`` with a
+# ``topology_`` prefix.
+TOPOLOGY_COUNTERS = (
+    "edge_refreshes",  # GraphUpdate.refresh rounds fired
+    "edges_added",  # undirected edges created across all topology swaps
+    "edges_removed",  # undirected edges dropped across all topology swaps
+    "weight_patches",  # same-structure partition rebinds (weights only)
+    "structural_patches",  # GraphPartition.patch() calls (ownership frozen)
+    "repartitions",  # full partition_graph rebuilds (drift over threshold)
+    "arrivals",  # agents admitted mid-run
+    "last_drift",  # gauge: cut-fraction drift measured at the last swap
+)
+
+
+def topology_log_init() -> dict:
+    """A fresh host-side dynamic-topology counter dict (all zeros)."""
+    return {k: (0.0 if k == "last_drift" else 0) for k in TOPOLOGY_COUNTERS}
+
+
 def summarize_counters(snapshot: dict) -> dict:
     """Collapse a (possibly shard-stacked) snapshot into JSON-ready totals.
 

@@ -36,8 +36,20 @@ from repro.sim.partition import (
     rcm_order,
     sfc_order,
 )
-from repro.sim.scenarios import ChurnConfig, DelayConfig, Scenario, StragglerConfig
-from repro.sim.updates import CDUpdate, DPCDUpdate, LocalUpdate, PropagationUpdate
+from repro.sim.scenarios import (
+    ArrivalConfig,
+    ChurnConfig,
+    DelayConfig,
+    Scenario,
+    StragglerConfig,
+)
+from repro.sim.updates import (
+    CDUpdate,
+    DPCDUpdate,
+    GraphUpdate,
+    LocalUpdate,
+    PropagationUpdate,
+)
 
 # Curated public surface: engines + their config, the update rules, the
 # scenario bundles, partitioning, and the clock helpers. Everything else
@@ -55,9 +67,11 @@ __all__ = [
     # update rules
     "CDUpdate",
     "DPCDUpdate",
+    "GraphUpdate",
     "LocalUpdate",
     "PropagationUpdate",
     # scenarios
+    "ArrivalConfig",
     "ChurnConfig",
     "DelayConfig",
     "Scenario",

@@ -60,6 +60,21 @@ class EngineConfig:
       defaults; deprecated bare strings still coerce);
     * ``partition``: a prebuilt ``GraphPartition`` to reuse;
     * ``devices``: explicit device list for the mesh.
+
+    Dynamic topology (both engines; the sharded engine adds the
+    repartition policy):
+
+    * ``graph_update``: a :class:`repro.sim.updates.GraphUpdate` firing
+      a Dada-style edge refresh every ``graph_update.every`` slots
+      (None = static topology, the default — and the bit-exactness
+      anchor: a static-topology run is byte-identical to the
+      pre-dynamic engines);
+    * ``drift_threshold``: sharded repartition trigger. After each
+      structural topology change the engine measures
+      :meth:`repro.sim.partition.GraphPartition.drift`; at or below the
+      threshold it patches the existing cut
+      (:meth:`GraphPartition.patch`, ownership frozen), above it it
+      pays for a full ``partition_graph`` rebuild.
     """
 
     slot_wakes: float = 64.0
@@ -77,6 +92,8 @@ class EngineConfig:
     exchange: Any = None  # ExchangeSpec | deprecated str | None
     partition: Any = None
     devices: Any = None
+    graph_update: Any = None  # GraphUpdate | None (None = static topology)
+    drift_threshold: float = 0.25
 
     def __post_init__(self):
         if self.fused not in (False, True, "auto"):

@@ -52,10 +52,11 @@ import numpy as np
 
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.graph import as_csr, neighbor_counts
+from repro.core.graph import TopologyState, as_csr, csr_from_coo, neighbor_counts
 from repro.core.mixing import kernel_max_n, sharded_mix_op
+from repro.core.model_propagation import propagation_rows_from
 from repro.core.spmd_compat import shard_map
-from repro.obs.metrics import ExchangeVolume, MetricsAccumulator
+from repro.obs.metrics import ExchangeVolume, MetricsAccumulator, topology_log_init
 from repro.sim import clocks
 from repro.sim.config import EngineConfig, resolve_config
 from repro.sim.partition import partition_graph
@@ -165,6 +166,175 @@ def _event_stride(events, default: int) -> int:
     return math.gcd(*periods) if periods else default
 
 
+# ---------------------------------------------------------------------------
+# Dynamic-topology host helpers (shared by both engines)
+# ---------------------------------------------------------------------------
+
+
+def _csr_triples(csr):
+    """Directed ``(rows, cols, vals)`` triples of a CSR graph."""
+    rows = csr.row_ids().astype(np.int64)
+    return rows, np.asarray(csr.indices, dtype=np.int64), np.asarray(csr.data)
+
+
+def _slot_capacity(csr) -> int:
+    """Neighbour-slot capacity for a live topology: the max degree rounded
+    up to a multiple of 8, so moderate edge churn keeps the engine tile
+    shapes — and the compiled super-tick — stable between refreshes."""
+    need = max(1, int(csr.max_degree()))
+    return ((need + 7) // 8) * 8
+
+
+def _edge_delta(old, new) -> tuple[int, int]:
+    """Undirected ``(added, removed)`` edge counts between two CSR graphs."""
+    ro, co, _ = _csr_triples(old)
+    rn, cn, _ = _csr_triples(new)
+    ko = ro * old.n + co
+    kn = rn * new.n + cn
+    return int(np.setdiff1d(kn, ko).size) // 2, int(np.setdiff1d(ko, kn).size) // 2
+
+
+def _check_topology(n: int, new_csr, pending) -> None:
+    """Validate a topology swap: same n, and no agent outside the pending
+    arrival set may end up with zero neighbours (Eq. 4 / Eq. 16 divide
+    by the degree the moment the agent wakes)."""
+    if new_csr.n != n:
+        raise ValueError(f"topology must keep n={n}, got n={new_csr.n}")
+    orphans = np.setdiff1d(
+        np.flatnonzero(np.diff(new_csr.indptr) == 0), sorted(pending)
+    )
+    if orphans.size:
+        raise ValueError(
+            f"agents {orphans[:8].tolist()} would have no neighbours "
+            "(Eq. 4 / Eq. 16 divide by the degree)"
+        )
+
+
+def _detach_edges(csr, ids, *, require_connected: bool = True):
+    """Drop every edge incident to ``ids`` (the not-yet-arrived agents).
+
+    With ``require_connected`` (default) every *other* agent must keep at
+    least one neighbour — Eq. 4 / Eq. 16 divide by the degree, so an
+    established agent whose edges all ran through scheduled arrivals
+    would wake straight into a division by zero.
+    """
+    rows, cols, vals = _csr_triples(csr)
+    drop = np.isin(rows, ids) | np.isin(cols, ids)
+    out = csr_from_coo(csr.n, rows[~drop], cols[~drop], vals[~drop], symmetrize=True)
+    if require_connected:
+        bad = np.setdiff1d(np.flatnonzero(np.diff(out.indptr) == 0), ids)
+        if bad.size:
+            raise ValueError(
+                f"agents {bad[:8].tolist()} would have no neighbours until the "
+                "scheduled arrivals join; established agents need edges that "
+                "do not run through not-yet-arrived agents"
+            )
+    return out
+
+
+def _attach_edges(csr, rows, cols, vals):
+    """A CSR graph with the given undirected edges added (max-weight dedupe)."""
+    r0, c0, v0 = _csr_triples(csr)
+    return csr_from_coo(
+        csr.n,
+        np.concatenate([r0, np.asarray(rows, np.int64)]),
+        np.concatenate([c0, np.asarray(cols, np.int64)]),
+        np.concatenate([v0, np.asarray(vals, np.float64)]),
+        symmetrize=True,
+        dedupe="max",
+    )
+
+
+def _arrival_edges(arrival, ids, established, rng):
+    """Attachment edges for an admission batch: ``(rows, cols, vals)``."""
+    rows: list[int] = []
+    cols: list[int] = []
+    for i in ids:
+        nbrs = arrival.neighbors_for(int(i), established, rng)
+        rows.extend([int(i)] * len(nbrs))
+        cols.extend(int(j) for j in nbrs)
+    vals = np.full(len(rows), float(arrival.attach_weight))
+    return np.asarray(rows, np.int64), np.asarray(cols, np.int64), vals
+
+
+def _warm_start_rows(csr, Theta, ids, rounds: int) -> np.ndarray:
+    """Eq. 16 warm start for arriving agents (host-side).
+
+    The model-propagation step with confidence ``c_i = 0`` reduces to a
+    pure weighted neighbour average — the fixed-point semantics for an
+    agent with no local contribution yet. Iterated ``rounds`` times over
+    the arrival rows only (established rows stay fixed), via the same
+    :func:`repro.core.model_propagation.propagation_rows_from` formula
+    the engines run.
+    """
+    Theta = np.array(Theta, dtype=np.float64, copy=True)
+    ids = np.asarray(ids, dtype=np.int64)
+    p = Theta.shape[1]
+    for _ in range(rounds):
+        neigh = np.zeros((ids.size, p))
+        d = np.zeros(ids.size)
+        for j, i in enumerate(ids):
+            lo, hi = int(csr.indptr[i]), int(csr.indptr[i + 1])
+            w = np.asarray(csr.data[lo:hi])
+            neigh[j] = w @ Theta[csr.indices[lo:hi]]
+            d[j] = w.sum()
+        if np.any(d <= 0):
+            raise ValueError("arriving agents must attach with positive-weight edges")
+        rows = propagation_rows_from(
+            1.0,
+            jnp.asarray(d),
+            jnp.zeros(ids.size),
+            jnp.zeros((ids.size, p)),
+            jnp.asarray(neigh),
+        )
+        Theta[ids] = np.asarray(rows)
+    return Theta
+
+
+def _drive_dynamic(engine, state, slots: int, events, advance):
+    """Segment driver for dynamic-topology runs (both engines).
+
+    Splits the run at every absolute slot where anything fires — the
+    periodic ``(every, cb)`` events, a :class:`GraphUpdate` refresh, or a
+    scheduled arrival — advances between the fire points with the shared
+    chunked driver, and applies the topology work at the boundaries
+    (graph changes land between super-ticks, never inside a scan). Order
+    at a shared boundary: edge refresh, then admissions (so new agents
+    attach to the refreshed graph), then the periodic callbacks.
+    """
+    gu = engine.config.graph_update
+    arrival = engine.scenario.arrival
+    start = engine._ptr_of(state)
+    end = start + slots
+    points = {end}
+    for every, _cb in events:
+        points.update(range(start + every, end, every))
+    if gu is not None:
+        points.update(range(start + gu.every, end, gu.every))
+    admissions: dict[int, tuple[int, ...]] = {}
+    if arrival is not None:
+        for slot, ids in arrival.by_slot().items():
+            t = slot - 1  # agents join at the *start* of their slot
+            pend = tuple(i for i in ids if i in engine._pending)
+            if pend and start <= t < end:
+                admissions[t] = pend
+    points.update(admissions)
+    prev = start
+    for t in sorted(points):
+        if t > prev:
+            state = _drive_slots(state, t - prev, engine.steps_per_chunk, advance)
+        prev = t
+        rel = t - start
+        if gu is not None and 0 < rel and t < end and rel % gu.every == 0:
+            state = engine._refresh_topology(state, rel // gu.every)
+        if t in admissions:
+            state = engine.admit(state, admissions[t])
+        for every, cb in events:
+            if rel % every == 0 or t == end:
+                cb(state)
+    return state
+
+
 class AsyncEngine:
     """Batched event-driven driver for any :class:`LocalUpdate`.
 
@@ -197,6 +367,18 @@ class AsyncEngine:
         if not (0 < self.batch_size <= self.n):
             raise ValueError("batch_size must lie in (0, n]")
         self.scenario = cfg.scenario or Scenario()
+        self.dynamic = cfg.graph_update is not None or self.scenario.arrival is not None
+        self.topology_log = topology_log_init()
+        if self.dynamic and self.scenario.delay is not None:
+            raise NotImplementedError(
+                "dynamic topology and per-edge delays do not compose yet: the "
+                "snapshot-ring delay tiles are baked per graph"
+            )
+        if self.dynamic and cfg.fused is True:
+            raise ValueError(
+                "fused=True is static-topology only (the Pallas slab bakes the "
+                "neighbour tables); leave fused='auto' for dynamic runs"
+            )
 
         self._deg_counts = np.asarray(neighbor_counts(update.graph), dtype=np.float32)
         churn = self.scenario.churn
@@ -220,7 +402,8 @@ class AsyncEngine:
         else:
             self._idx = self._w = self._delays = None
 
-        self.fused = _resolve_fused(update, cfg.fused, self.n, self.dtype, delay is not None)
+        fused_knob = False if self.dynamic else cfg.fused
+        self.fused = _resolve_fused(update, fused_knob, self.n, self.dtype, delay is not None)
         if self.fused:
             # The fused kernel consumes padded (n, K) neighbour tables
             # whatever the MixOp backend (same tile build as the delay
@@ -254,6 +437,41 @@ class AsyncEngine:
         self._chunk = jax.jit(self._chunk_impl, static_argnums=1)
         self._forced = jax.jit(self._slot_forced)
 
+        # Dynamic topology: the graph becomes mutable state. The live CSR
+        # and its slot-form TopologyState stay host-side; the super-tick
+        # consumes jit-argument tiles (never closures), so a topology swap
+        # between chunks re-executes the compiled program with new data.
+        self._pending: set[int] = set()
+        if self.dynamic:
+            arrival = self.scenario.arrival
+            csr = as_csr(update.graph)
+            if arrival is not None:
+                self._pending = {int(i) for i in arrival.all_ids()}
+                bad = [i for i in self._pending if not 0 <= i < self.n]
+                if bad:
+                    raise ValueError(f"arrival ids {bad} outside [0, n={self.n})")
+                csr = _detach_edges(csr, sorted(self._pending))
+            consts_fn = getattr(update, "agent_constants", None)
+            base = None if consts_fn is None else consts_fn()
+            if not isinstance(base, dict) or "deg" not in base:
+                raise ValueError(
+                    "dynamic topology needs update.agent_constants() to return "
+                    "a dict with a 'deg' entry (the graph-dependent constant "
+                    "the engine re-derives from the live topology)"
+                )
+            self._consts_base = {
+                k: jnp.asarray(v) for k, v in base.items() if k != "deg"
+            }
+            self._csr = csr
+            self.topo = TopologyState.from_csr(csr, capacity=_slot_capacity(csr))
+            self._dyn = self._dyn_tiles()
+            self._chunk_dyn = jax.jit(self._chunk_dyn_impl, static_argnums=2)
+            self._forced_dyn = jax.jit(self._slot_dyn_forced)
+        else:
+            self._csr = None
+            self.topo = None
+            self._dyn = None
+
     # -- state ------------------------------------------------------------
     def init_state(self, Theta0, seed: int | None = None) -> SimState:
         """Fresh engine state from an (n, p) initial model matrix."""
@@ -264,11 +482,17 @@ class AsyncEngine:
             hist = jnp.broadcast_to(Theta, (self.depth, self.n, self.p))
         else:
             hist = jnp.zeros((0, 0, 0), self.dtype)  # no-delay placeholder
+        active = np.ones(self.n, dtype=bool)
+        if self._pending:
+            # Scheduled arrivals exist in the arrays but are not part of
+            # the system yet: inactive (never woken) and edge-detached
+            # until their slot admits them.
+            active[sorted(self._pending)] = False
         return SimState(
             Theta=Theta,
             hist=hist,
             ptr=jnp.zeros((), jnp.int32),
-            active=jnp.ones(self.n, bool),
+            active=jnp.asarray(active),
             key=jax.random.PRNGKey(self._seed if seed is None else seed),
             ustate=self.update.init_state(),
             applied=jnp.zeros((), jnp.int32),
@@ -406,6 +630,217 @@ class AsyncEngine:
         out, _ = jax.lax.scan(body, state, None, length=steps)
         return out
 
+    # -- dynamic-topology super-tick ---------------------------------------
+    def _dyn_tiles(self) -> dict:
+        """Jit-argument tiles of the live topology.
+
+        ``idx``/``w`` are the capacity-padded neighbour slots (invalid
+        slots point at the own row with weight 0, so the mix einsum adds
+        exact zeros), ``counts`` the live |N_i| for message accounting,
+        and ``consts`` the update's agent constants with the
+        graph-dependent ``deg`` entry re-derived from the topology.
+        Shapes are stable while the slot capacity holds, so a swap
+        re-executes the compiled super-tick without retracing.
+        """
+        t = self.topo
+        w = np.where(np.asarray(t.valid), np.asarray(t.w), 0.0)
+        consts = dict(self._consts_base)
+        consts["deg"] = jnp.asarray(w.sum(axis=1))
+        tiles = {
+            "idx": jnp.asarray(t.nbr),
+            "w": jnp.asarray(w, self.dtype),
+            "counts": jnp.asarray(np.asarray(t.valid).sum(axis=1), jnp.float32),
+            "consts": consts,
+        }
+        if self._rejoin is not None:
+            # Churn rejoin must not resurrect a not-yet-arrived agent:
+            # pending rows are edge-detached (zero degree), so waking one
+            # would divide by zero. Zeroing their rejoin probability here
+            # (a jit argument, not a closure) keeps the compiled slot
+            # current as admissions drain the pending set.
+            rejoin = np.asarray(self._rejoin, np.float32).copy()
+            if self._pending:
+                rejoin[sorted(self._pending)] = 0.0
+            tiles["rejoin"] = jnp.asarray(rejoin)
+        return tiles
+
+    def _slot_dyn(self, state: SimState, tiles: dict, wake_mask) -> SimState:
+        """One super-tick against the live-topology tiles (no fused or
+        delay variants: both bake per-graph structure into the program)."""
+        n, B = self.n, self.batch_size
+        with jax.named_scope("obs.wake_sample"):
+            key, k_leave, k_rejoin, k_wake, k_strag, k_upd = jax.random.split(
+                state.key, 6
+            )
+
+            active_prev = state.active
+            active = active_prev
+            if wake_mask is None:
+                if self._leave is not None:
+                    leave = jax.random.uniform(k_leave, (n,)) < jnp.asarray(
+                        self._leave, jnp.float32
+                    )
+                    rejoin = jax.random.uniform(k_rejoin, (n,)) < tiles["rejoin"]
+                    active = jnp.where(active, ~leave, rejoin)
+                wake = (
+                    jax.random.uniform(k_wake, (n,))
+                    < jnp.asarray(self.wake_probs, jnp.float32)
+                ) & active
+                wake_pre = wake
+                if self._drop is not None:
+                    wake = wake & (
+                        jax.random.uniform(k_strag, (n,))
+                        >= jnp.asarray(self._drop, jnp.float32)
+                    )
+            else:
+                wake = jnp.asarray(wake_mask, bool) & active
+                wake_pre = wake
+
+            total = wake.sum().astype(jnp.int32)
+            woken = jnp.nonzero(wake, size=B, fill_value=n)[0].astype(jnp.int32)
+            valid = woken < n
+            dropped = total - valid.sum().astype(jnp.int32)
+
+        Theta = state.Theta
+        safe = jnp.minimum(woken, n - 1)
+        with jax.named_scope("obs.gather_mix"):
+            cols = tiles["idx"][safe]  # (B, cap)
+            w = jnp.asarray(tiles["w"], Theta.dtype)[safe]  # (B, cap)
+            neigh = jnp.einsum("bk,bkp->bp", w, Theta[cols])
+        with jax.named_scope("obs.row_update"):
+            consts_rows = jax.tree.map(lambda t: t[safe], tiles["consts"])
+            new_rows, applied, ustate = self.update.apply_rows(
+                Theta[safe], woken, valid, neigh, k_upd, state.ustate,
+                srows=woken, ssize=n, consts=consts_rows,
+            )
+        with jax.named_scope("obs.scatter"):
+            tgt = jnp.where(applied, woken, n)
+            Theta = Theta.at[tgt].set(new_rows.astype(Theta.dtype), mode="drop")
+
+        with jax.named_scope("obs.finalize"):
+            deg = tiles["counts"][safe]
+            messages = state.messages + jnp.sum(jnp.where(applied, deg, 0.0))
+            metrics = state.metrics
+            if self._macc is not None:
+                metrics = self._macc.tick(
+                    metrics,
+                    ptr=state.ptr,
+                    wake_pre=wake_pre,
+                    wake=wake,
+                    applied=applied,
+                    woken=woken,
+                    capacity_dropped=dropped,
+                    active_prev=active_prev,
+                    active_new=active,
+                    dp_counts=ustate if self._macc.dp_limit is not None else None,
+                )
+            return SimState(
+                Theta=Theta,
+                hist=state.hist,
+                ptr=state.ptr + 1,
+                active=active,
+                key=key,
+                ustate=ustate,
+                applied=state.applied + applied.sum().astype(jnp.int32),
+                dropped=state.dropped + dropped,
+                messages=messages,
+                metrics=metrics,
+            )
+
+    def _slot_dyn_forced(self, state: SimState, tiles: dict, wake_mask) -> SimState:
+        return self._slot_dyn(state, tiles, wake_mask)
+
+    def _chunk_dyn_impl(self, state: SimState, tiles: dict, steps: int) -> SimState:
+        def body(s, _):
+            return self._slot_dyn(s, tiles, None), None
+
+        out, _ = jax.lax.scan(body, state, None, length=steps)
+        return out
+
+    # -- topology ----------------------------------------------------------
+    def _ptr_of(self, state: SimState) -> int:
+        """Host value of the slot counter (dynamic-driver bookkeeping)."""
+        return int(np.asarray(state.ptr))
+
+    def set_topology(self, new_csr) -> None:
+        """Swap the live collaboration graph (host-side, between slots).
+
+        Validates the swap (same n; no *active-or-established* agent may
+        end up with zero neighbours — Eq. 4 / Eq. 16 divide by degree),
+        rebuilds the slot-form topology and the jit-argument tiles, and
+        bumps the edge-churn counters. The compiled super-tick is reused
+        as long as the new max degree fits the current slot capacity;
+        outgrowing it recompiles once at the larger capacity.
+        """
+        if not self.dynamic:
+            raise ValueError(
+                "static-topology engine; construct with "
+                "EngineConfig(graph_update=...) or an arrival scenario"
+            )
+        _check_topology(self.n, new_csr, self._pending)
+        added, removed = _edge_delta(self._csr, new_csr)
+        cap = max(self.topo.nbr.shape[1], _slot_capacity(new_csr))
+        self.topo = TopologyState.from_csr(
+            new_csr, capacity=cap, version=int(self.topo.version) + 1
+        )
+        self._csr = new_csr
+        self._dyn = self._dyn_tiles()
+        self.topology_log["edges_added"] += added
+        self.topology_log["edges_removed"] += removed
+
+    def _refresh_topology(self, state: SimState, round_index: int) -> SimState:
+        """Fire one Dada edge-refresh round against the current models."""
+        gu = self.config.graph_update
+        allowed = None
+        if self._pending:
+            allowed = np.ones(self.n, dtype=bool)
+            allowed[sorted(self._pending)] = False
+        new_csr = gu.refresh(
+            self._csr, np.asarray(state.Theta), round_index=round_index, allowed=allowed
+        )
+        self.set_topology(new_csr)
+        self.topology_log["edge_refreshes"] += 1
+        return state
+
+    def admit(self, state: SimState, ids) -> SimState:
+        """Join scheduled arrival agents now: attach, warm start, activate.
+
+        ``ids`` must be pending (scheduled, not yet admitted) arrivals.
+        Attachment targets come from the :class:`ArrivalConfig` (explicit
+        map, or a draw over currently active agents seeded by
+        ``(arrival.seed, slot)``); with ``warm_start`` the new rows are
+        initialized by the Eq. 16 confidence-0 neighbour average before
+        the agent's first wake.
+        """
+        arrival = self.scenario.arrival
+        if arrival is None:
+            raise ValueError("no arrival scenario configured")
+        ids = tuple(int(i) for i in ids)
+        missing = [i for i in ids if i not in self._pending]
+        if missing:
+            raise ValueError(f"agents {missing} are not pending arrivals")
+        rng = np.random.default_rng((arrival.seed, self._ptr_of(state)))
+        active_g = np.asarray(state.active).copy()
+        established = np.flatnonzero(active_g)
+        rows, cols, vals = _arrival_edges(arrival, ids, established, rng)
+        self.set_topology(_attach_edges(self._csr, rows, cols, vals))
+        Theta = np.asarray(state.Theta)
+        if arrival.warm_start:
+            Theta = _warm_start_rows(self._csr, Theta, ids, arrival.warm_rounds)
+        active_g[list(ids)] = True
+        self._pending -= set(ids)
+        if self._rejoin is not None:
+            # Admitted agents regain their churn rejoin probability.
+            self._dyn = self._dyn_tiles()
+        self.topology_log["arrivals"] += len(ids)
+        return state._replace(
+            Theta=jnp.asarray(Theta, self.dtype), active=jnp.asarray(active_g)
+        )
+
+    def topology_counters(self) -> dict:
+        """Host-side dynamic-topology counters (all zeros when static)."""
+        return dict(self.topology_log)
+
     # -- observability -----------------------------------------------------
     @property
     def phase_names(self) -> tuple:
@@ -420,6 +855,10 @@ class AsyncEngine:
         phase; each returns the cut phase's live intermediates so XLA
         cannot dead-code-eliminate the prefix.
         """
+        if self.dynamic:
+            raise NotImplementedError(
+                "phase profiling serves the static-topology path only"
+            )
         if upto is not None and upto not in self._phases:
             raise ValueError(f"unknown phase {upto!r} (have {self._phases})")
         if upto not in self._phase_cache:
@@ -448,6 +887,8 @@ class AsyncEngine:
             eps = np.asarray(self.update.eps_spent(np.asarray(ustate)))
             derived["dp_eps_spent_mean"] = float(eps.mean())
             derived["dp_eps_spent_max"] = float(eps.max())
+        if self.dynamic:
+            derived.update({f"topology_{k}": v for k, v in self.topology_log.items()})
         return derived
 
     def report_meta(self) -> dict:
@@ -466,10 +907,14 @@ class AsyncEngine:
     # -- drivers -----------------------------------------------------------
     def step(self, state: SimState, wake_mask) -> SimState:
         """One super-tick with an explicit wake set (tests/diagnostics)."""
+        if self.dynamic:
+            return self._forced_dyn(state, self._dyn, jnp.asarray(wake_mask, bool))
         return self._forced(state, jnp.asarray(wake_mask, bool))
 
     def advance(self, state: SimState, slots: int) -> SimState:
         """Run ``slots`` sampled super-ticks as one jitted scan chunk."""
+        if self.dynamic:
+            return self._chunk_dyn(state, self._dyn, int(slots))
         return self._chunk(state, int(slots))
 
     def run(
@@ -517,13 +962,22 @@ class AsyncEngine:
                 report.add_snapshot(int(s.ptr), counters, derived)
 
             events.append((metrics_every, _drain))
-        state = _drive_slots(
-            state,
-            slots,
-            _event_stride(events, self.steps_per_chunk),
-            self._chunk,
-            events,
-        )
+        if self.dynamic:
+            state = _drive_dynamic(
+                self,
+                state,
+                slots,
+                events,
+                lambda s, steps: self._chunk_dyn(s, self._dyn, steps),
+            )
+        else:
+            state = _drive_slots(
+                state,
+                slots,
+                _event_stride(events, self.steps_per_chunk),
+                self._chunk,
+                events,
+            )
         return SimResult(
             Theta=np.asarray(state.Theta),
             objective=np.asarray(objective) if record else None,
@@ -664,6 +1118,24 @@ class ShardedAsyncEngine:
                 "per-edge delays are single-device only (the snapshot-ring "
                 "gather has no halo-exchange form yet); use AsyncEngine"
             )
+        self.dynamic = cfg.graph_update is not None or self.scenario.arrival is not None
+        self.topology_log = topology_log_init()
+        if self.dynamic and cfg.fused is True:
+            raise ValueError(
+                "fused=True is static-topology only (the Pallas slab bakes the "
+                "neighbour tables); leave fused='auto' for dynamic runs"
+            )
+        self._pending: set[int] = set()
+        csr = as_csr(update.graph)
+        if self.dynamic:
+            arrival = self.scenario.arrival
+            if arrival is not None:
+                self._pending = {int(i) for i in arrival.all_ids()}
+                bad = [i for i in self._pending if not 0 <= i < self.n]
+                if bad:
+                    raise ValueError(f"arrival ids {bad} outside [0, n={self.n})")
+                csr = _detach_edges(csr, sorted(self._pending))
+        self._csr = csr
 
         devices = list(jax.devices() if cfg.devices is None else cfg.devices)
         if len(devices) < num_shards:
@@ -677,6 +1149,11 @@ class ShardedAsyncEngine:
             # Reuse a prebuilt GraphPartition (e.g. one already analysed
             # for exchange stats) instead of re-running the relabel/cut/
             # tile build; it must describe the same graph and shard count.
+            if self._pending:
+                raise ValueError(
+                    "partition reuse does not compose with arrival scenarios "
+                    "(the engine detaches scheduled arrivals before cutting)"
+                )
             if partition.n != self.n or partition.num_shards != num_shards:
                 raise ValueError(
                     f"prebuilt partition is (n={partition.n}, S={partition.num_shards}), "
@@ -685,7 +1162,7 @@ class ShardedAsyncEngine:
             self.part = partition
         else:
             self.part = partition_graph(
-                as_csr(update.graph),
+                csr,
                 num_shards,
                 mode=cfg.partition_mode,
                 relabel=cfg.relabel,
@@ -724,64 +1201,24 @@ class ShardedAsyncEngine:
         strag = self.scenario.straggler
         self._drop = strag.drop_vector(self.n) if strag else None
 
-        part = self.part
-        deg_counts = np.asarray(neighbor_counts(update.graph), dtype=np.float32)
-        zeros = np.zeros(self.n, dtype=np.float32)
-
-        def prob_tiles(v):
-            v = zeros if v is None else v.astype(np.float32)
-            return jnp.asarray(part.pad_rows(v))
-
-        # Shard-resident per-agent constants: tiled along the same agent
-        # blocks as Theta and passed through shard_map (never closed
-        # over), so dataset memory scales with S instead of replicating
-        # obj.data onto every device. Float leaves are pre-cast to the
-        # engine dtype — elementwise cast commutes with the row gather,
-        # so this is bit-identical to the single-device
-        # cast-then-gather while halving the tile bytes for f32 runs.
-        def const_tile(a):
-            a = np.asarray(a)
-            if np.issubdtype(a.dtype, np.floating):
-                a = a.astype(self.dtype)
-            return jnp.asarray(part.pad_rows(a))
-
         self.metrics_spec = cfg.metrics_spec()
-        if self.metrics_spec is None:
-            self._macc = None
-            mstatic = None
-        else:
-            vol = self._exchange_volume()
-            self._macc = MetricsAccumulator(
-                self.metrics_spec,
-                R,
-                churn=self._leave is not None,
-                straggler=self._drop is not None,
-                dp_limit=getattr(update, "planned_Ti", None),
-                exchange_offsets=vol.num_offsets if self.smix.method == "p2p" else 0,
-                quantized=self.smix.dtype != "f32",
-            )
-            mstatic = None if self._macc.exchange_offsets is None else vol.tiles()
-
         consts_fn = getattr(self.update, "agent_constants", None)
-        consts_tiles = None if consts_fn is None else jax.tree.map(const_tile, consts_fn())
-        self._static = _ShardStatic(
-            wake_probs=jnp.asarray(part.pad_rows(self.wake_probs.astype(np.float32))),
-            leave=prob_tiles(self._leave),
-            rejoin=prob_tiles(self._rejoin),
-            drop=prob_tiles(self._drop),
-            owned=jnp.asarray(part.owned),
-            deg=jnp.asarray(part.pad_rows(deg_counts)),
-            idx=jnp.asarray(part.idx),
-            w=jnp.asarray(part.w, self.dtype),
-            exchange=jax.tree.map(jnp.asarray, self.smix.exchange_inputs()),
-            consts=consts_tiles,
-            mstatic=mstatic,
-        )
+        self._consts_base = None if consts_fn is None else consts_fn()
+        if self.dynamic and not (
+            isinstance(self._consts_base, dict) and "deg" in self._consts_base
+        ):
+            raise ValueError(
+                "dynamic topology needs update.agent_constants() to return a "
+                "dict with a 'deg' entry (the graph-dependent constant the "
+                "engine re-derives from the live topology)"
+            )
+        self._rebuild_static()
 
         # The sharded slab is the halo-extended block (R + Hmax rows) —
         # that is what the fused kernel keeps VMEM-resident per shard.
+        fused_knob = False if self.dynamic else cfg.fused
         self.fused = _resolve_fused(
-            update, cfg.fused, R + self.smix.halo_width, self.dtype, False
+            update, fused_knob, R + self.smix.halo_width, self.dtype, False
         )
         self._use_ef = self.smix.error_feedback
 
@@ -819,6 +1256,85 @@ class ShardedAsyncEngine:
             p2p_bytes=p2p_bytes,
         )
 
+    def _rebuild_static(self) -> None:
+        """(Re)build the per-shard jit-argument tiles from the current
+        partition, exchange, and live graph.
+
+        Called at construction and after every topology swap — everything
+        graph- or cut-dependent rides in :class:`_ShardStatic`, which is a
+        ``shard_map`` *input*, so a swap that preserves tile shapes
+        re-executes the compiled super-tick with new data (no retrace).
+        """
+        part = self.part
+        R = part.rows_per_shard
+        deg_counts = np.asarray(neighbor_counts(self._csr), dtype=np.float32)
+        zeros = np.zeros(self.n, dtype=np.float32)
+
+        def prob_tiles(v):
+            v = zeros if v is None else v.astype(np.float32)
+            return jnp.asarray(part.pad_rows(v))
+
+        # Shard-resident per-agent constants: tiled along the same agent
+        # blocks as Theta and passed through shard_map (never closed
+        # over), so dataset memory scales with S instead of replicating
+        # obj.data onto every device. Float leaves are pre-cast to the
+        # engine dtype — elementwise cast commutes with the row gather,
+        # so this is bit-identical to the single-device
+        # cast-then-gather while halving the tile bytes for f32 runs.
+        def const_tile(a):
+            a = np.asarray(a)
+            if np.issubdtype(a.dtype, np.floating):
+                a = a.astype(self.dtype)
+            return jnp.asarray(part.pad_rows(a))
+
+        if self.metrics_spec is None:
+            self._macc = None
+            mstatic = None
+        else:
+            vol = self._exchange_volume()
+            self._macc = MetricsAccumulator(
+                self.metrics_spec,
+                R,
+                churn=self._leave is not None,
+                straggler=self._drop is not None,
+                dp_limit=getattr(self.update, "planned_Ti", None),
+                exchange_offsets=vol.num_offsets if self.smix.method == "p2p" else 0,
+                quantized=self.smix.dtype != "f32",
+            )
+            mstatic = None if self._macc.exchange_offsets is None else vol.tiles()
+
+        consts_tiles = (
+            None
+            if self._consts_base is None
+            else jax.tree.map(const_tile, self._consts_base)
+        )
+        if self.dynamic and consts_tiles is not None:
+            # The 'deg' constant is graph-dependent: re-derive it from the
+            # live topology so Eq. 4 / Eq. 16 divide by current degrees.
+            consts_tiles = dict(consts_tiles)
+            consts_tiles["deg"] = const_tile(np.asarray(self._csr.degrees))
+        # Churn rejoin must not resurrect a not-yet-arrived agent: pending
+        # rows are edge-detached (zero degree — Eq. 4 would divide by
+        # zero), so their rejoin probability is zero until admission
+        # rebuilds these tiles.
+        rejoin_vec = self._rejoin
+        if rejoin_vec is not None and self._pending:
+            rejoin_vec = rejoin_vec.astype(np.float32).copy()
+            rejoin_vec[sorted(self._pending)] = 0.0
+        self._static = _ShardStatic(
+            wake_probs=jnp.asarray(part.pad_rows(self.wake_probs.astype(np.float32))),
+            leave=prob_tiles(self._leave),
+            rejoin=prob_tiles(rejoin_vec),
+            drop=prob_tiles(self._drop),
+            owned=jnp.asarray(part.owned),
+            deg=jnp.asarray(part.pad_rows(deg_counts)),
+            idx=jnp.asarray(part.idx),
+            w=jnp.asarray(part.w, self.dtype),
+            exchange=jax.tree.map(jnp.asarray, self.smix.exchange_inputs()),
+            consts=consts_tiles,
+            mstatic=mstatic,
+        )
+
     # -- state ------------------------------------------------------------
     def init_state(self, Theta0, seed: int | None = None) -> ShardedSimState:
         """Fresh sharded state from an (n, p) initial model matrix
@@ -839,9 +1355,14 @@ class ShardedAsyncEngine:
                 )
             return jnp.asarray(part.pad_rows(x))
 
+        active = np.ones(self.n, dtype=bool)
+        if self._pending:
+            # Scheduled arrivals: present in the arrays, not in the system
+            # — inactive and edge-detached until their slot admits them.
+            active[sorted(self._pending)] = False
         return ShardedSimState(
             Theta=jnp.asarray(part.pad_rows(Theta)),
-            active=jnp.asarray(part.pad_rows(np.ones(self.n, bool), fill=False)),
+            active=jnp.asarray(part.pad_rows(active, fill=False)),
             keys=keys,
             ustate=jax.tree.map(shard_leaf, self.update.init_state()),
             applied=jnp.zeros(S, jnp.int32),
@@ -1013,6 +1534,167 @@ class ShardedAsyncEngine:
             out_specs=P("shards"),
         )(state, static, wake_mask)
 
+    # -- topology ----------------------------------------------------------
+    def _ptr_of(self, state: ShardedSimState) -> int:
+        """Host value of the slot counter (identical across shards)."""
+        return int(np.asarray(state.ptr)[0])
+
+    def set_topology(self, state: ShardedSimState, new_csr) -> ShardedSimState:
+        """Swap the live graph and rebind the sharded machinery.
+
+        Three tiers, by how much of the standing cut survives:
+
+        * **weight-only** (identical structure) — retile the weights via
+          :meth:`GraphPartition.patch`'s fast path; the point-to-point
+          plan and every index tile are reused as-is;
+        * **structural, drift <= ``config.drift_threshold``** — patch the
+          frozen ownership (:meth:`GraphPartition.patch`): halo/border
+          tiles rebuild, agent placement and the model state stay put;
+        * **drift above threshold** — pay for a full ``partition_graph``
+          rebuild (fresh relabel + cut) and re-lay the state onto the new
+          ownership.
+
+        Returns the (possibly re-laid-out) state. The error-feedback
+        accumulator survives weight-only patches and re-initializes on
+        structural changes (border rows moved, so the standing residuals
+        no longer describe the wire); device metrics re-initialize only
+        if a rebuild changed the counter shapes.
+        """
+        if not self.dynamic:
+            raise ValueError(
+                "static-topology engine; construct with "
+                "EngineConfig(graph_update=...) or an arrival scenario"
+            )
+        _check_topology(self.n, new_csr, self._pending)
+        added, removed = _edge_delta(self._csr, new_csr)
+        old_part = self.part
+        same_structure = np.array_equal(
+            old_part.csr.indptr, new_csr.indptr
+        ) and np.array_equal(old_part.csr.indices, new_csr.indices)
+        relayout = False
+        if same_structure:
+            new_part = old_part.patch(new_csr)
+            self.topology_log["weight_patches"] += 1
+        else:
+            drift = float(old_part.drift(new_csr))
+            self.topology_log["last_drift"] = drift
+            if drift <= float(self.config.drift_threshold):
+                new_part = old_part.patch(new_csr)
+                self.topology_log["structural_patches"] += 1
+            else:
+                new_part = partition_graph(
+                    new_csr,
+                    self.num_shards,
+                    mode=self.config.partition_mode,
+                    relabel=self.config.relabel,
+                    coords=self.config.coords,
+                )
+                self.topology_log["repartitions"] += 1
+                relayout = True
+        self._csr = new_csr
+        self.topology_log["edges_added"] += added
+        self.topology_log["edges_removed"] += removed
+
+        if relayout:
+            # Ownership changed: route every per-agent leaf through the
+            # global order (old unpad -> new pad). (S,) scalars and the
+            # per-shard keys keep their meaning — S is unchanged.
+            def relay(leaf, fill=0):
+                g = old_part.unpad_rows(np.asarray(leaf))
+                return jnp.asarray(new_part.pad_rows(g, fill=fill))
+
+            Theta = relay(state.Theta)
+            active = relay(state.active, fill=False)
+            ustate = jax.tree.map(relay, state.ustate)
+        else:
+            Theta, active, ustate = state.Theta, state.active, state.ustate
+
+        self.part = new_part
+        self.smix = self.smix.rebound(new_part)
+        self.exchange_method = self.smix.method
+        self.batch_size = int(min(self.batch_size, new_part.rows_per_shard))
+        self._rebuild_static()
+
+        if self._use_ef:
+            ef = state.ef
+            fresh_ef = self.smix.init_error_feedback(self.p, self.dtype)
+            if relayout or not same_structure or ef is None or (
+                np.shape(ef) != np.shape(fresh_ef)
+            ):
+                ef = fresh_ef
+        else:
+            ef = state.ef
+        metrics = state.metrics
+        if self._macc is not None:
+            fresh = jax.tree.map(
+                lambda a: jnp.tile(a[None], (self.num_shards,) + (1,) * a.ndim),
+                self._macc.init(),
+            )
+            old_leaves = jax.tree.leaves(metrics)
+            new_leaves = jax.tree.leaves(fresh)
+            if len(old_leaves) != len(new_leaves) or any(
+                np.shape(a) != np.shape(b) for a, b in zip(old_leaves, new_leaves)
+            ):
+                metrics = fresh
+        return state._replace(
+            Theta=Theta, active=active, ustate=ustate, ef=ef, metrics=metrics
+        )
+
+    def _refresh_topology(self, state: ShardedSimState, round_index: int):
+        """Fire one Dada edge-refresh round against the current models."""
+        gu = self.config.graph_update
+        allowed = None
+        if self._pending:
+            allowed = np.ones(self.n, dtype=bool)
+            allowed[sorted(self._pending)] = False
+        new_csr = gu.refresh(
+            self._csr,
+            self.global_theta(state),
+            round_index=round_index,
+            allowed=allowed,
+        )
+        state = self.set_topology(state, new_csr)
+        self.topology_log["edge_refreshes"] += 1
+        return state
+
+    def admit(self, state: ShardedSimState, ids) -> ShardedSimState:
+        """Join scheduled arrival agents now (sharded counterpart of
+        :meth:`AsyncEngine.admit`: attach, warm start, activate).
+
+        The attach edges go through :meth:`set_topology` — so an
+        admission can itself trigger a patch or a repartition — and the
+        warm-started rows are re-laid onto whatever partition results.
+        """
+        arrival = self.scenario.arrival
+        if arrival is None:
+            raise ValueError("no arrival scenario configured")
+        ids = tuple(int(i) for i in ids)
+        missing = [i for i in ids if i not in self._pending]
+        if missing:
+            raise ValueError(f"agents {missing} are not pending arrivals")
+        rng = np.random.default_rng((arrival.seed, self._ptr_of(state)))
+        active_g = np.asarray(self.part.unpad_rows(np.asarray(state.active))).copy()
+        established = np.flatnonzero(active_g)
+        rows, cols, vals = _arrival_edges(arrival, ids, established, rng)
+        state = self.set_topology(state, _attach_edges(self._csr, rows, cols, vals))
+        Theta_g = self.global_theta(state)
+        if arrival.warm_start:
+            Theta_g = _warm_start_rows(self._csr, Theta_g, ids, arrival.warm_rounds)
+        active_g[list(ids)] = True
+        self._pending -= set(ids)
+        if self._rejoin is not None:
+            # Admitted agents regain their churn rejoin probability.
+            self._rebuild_static()
+        self.topology_log["arrivals"] += len(ids)
+        return state._replace(
+            Theta=jnp.asarray(self.part.pad_rows(Theta_g), self.dtype),
+            active=jnp.asarray(self.part.pad_rows(active_g, fill=False)),
+        )
+
+    def topology_counters(self) -> dict:
+        """Host-side dynamic-topology counters (all zeros when static)."""
+        return dict(self.topology_log)
+
     # -- observability -----------------------------------------------------
     @property
     def phase_names(self) -> tuple:
@@ -1068,6 +1750,8 @@ class ShardedAsyncEngine:
             eps = np.asarray(self.update.eps_spent(counts))
             derived["dp_eps_spent_mean"] = float(eps.mean())
             derived["dp_eps_spent_max"] = float(eps.max())
+        if self.dynamic:
+            derived.update({f"topology_{k}": v for k, v in self.topology_log.items()})
         return counters, derived
 
     def report_meta(self) -> dict:
@@ -1141,13 +1825,22 @@ class ShardedAsyncEngine:
                 report.add_snapshot(int(np.asarray(s.ptr)[0]), counters, derived)
 
             events.append((metrics_every, _drain))
-        state = _drive_slots(
-            state,
-            slots,
-            _event_stride(events, self.steps_per_chunk),
-            lambda s, steps: self._chunk(s, self._static, steps),
-            events,
-        )
+        if self.dynamic:
+            state = _drive_dynamic(
+                self,
+                state,
+                slots,
+                events,
+                lambda s, steps: self._chunk(s, self._static, steps),
+            )
+        else:
+            state = _drive_slots(
+                state,
+                slots,
+                _event_stride(events, self.steps_per_chunk),
+                lambda s, steps: self._chunk(s, self._static, steps),
+                events,
+            )
         part = self.part
         return SimResult(
             Theta=self.global_theta(state),

@@ -137,6 +137,84 @@ class GraphPartition:
         _, sends, _ = self.p2p_plan
         return S * int(sum(s.shape[1] for s in sends))
 
+    # -- dynamic topology: drift gauge + incremental rebind ----------------
+    def cut_weight(self, csr: CSRGraph | None = None) -> float:
+        """Total edge weight crossing shard boundaries under *this* cut.
+
+        With ``csr`` given, the live graph is measured against the
+        ownership frozen at partition time — the drift gauge input.
+        """
+        csr = self.csr if csr is None else csr
+        if csr.n != self.n:
+            raise ValueError(f"graph has {csr.n} agents, partition has {self.n}")
+        rows = csr.row_ids()
+        cross = self.shard_of[rows] != self.shard_of[csr.indices]
+        return float(np.asarray(csr.data)[cross].sum() / 2.0)
+
+    def cut_fraction(self, csr: CSRGraph | None = None) -> float:
+        """Cut weight as a fraction of total edge weight (0 when no edges)."""
+        csr = self.csr if csr is None else csr
+        total = float(np.asarray(csr.data).sum() / 2.0)
+        if total <= 0.0:
+            return 0.0
+        return self.cut_weight(csr) / total
+
+    def drift(self, new_csr: CSRGraph) -> float:
+        """Topology drift: cut fraction of the live graph minus at cut time.
+
+        Positive drift means edge weight has migrated onto shard
+        boundaries since this partition was cut — the engine's
+        repartition-trigger policy compares it to
+        ``EngineConfig.drift_threshold``.
+        """
+        return self.cut_fraction(new_csr) - self.cut_fraction()
+
+    def patch(self, new_csr: CSRGraph) -> "GraphPartition":
+        """Rebind halo rows + exchange maps to ``new_csr`` without a rebuild.
+
+        Ownership (relabel order, block bounds, ``owned``/``shard_of``/
+        ``local_of``) is kept frozen — that is the entire saving over
+        :func:`partition_graph`, which would redo the relabel pass and
+        the block cut. Two paths:
+
+        * weight-only (identical ``indptr``/``indices``): only the ``w``
+          tiles are regathered; every map — including the cached
+          ``p2p_plan`` — carries over unchanged.
+        * structural: the halo/border/exchange maps and neighbour tiles
+          are rebuilt against the frozen ownership. The tile width never
+          shrinks (it grows to the new max degree when needed), keeping
+          downstream jit programs stable under pure edge deletion.
+        """
+        if new_csr.n != self.n:
+            raise ValueError(f"graph has {new_csr.n} agents, partition has {self.n}")
+        same_structure = np.array_equal(
+            np.asarray(self.csr.indptr), np.asarray(new_csr.indptr)
+        ) and np.array_equal(np.asarray(self.csr.indices), np.asarray(new_csr.indices))
+        if same_structure:
+            w = self.w.copy()
+            for s in range(self.num_shards):
+                lo, hi = int(self.bounds[s]), int(self.bounds[s + 1])
+                _, vals, deg, offs = _row_gather(new_csr, self.order[lo:hi])
+                rows_local = np.repeat(np.arange(hi - lo, dtype=np.int64), deg)
+                w[s, rows_local, offs] = vals
+            patched = dataclasses.replace(self, csr=new_csr, w=w)
+            # Same structure -> identical plan; carry the cache over.
+            patched.__dict__["p2p_plan"] = self.p2p_plan
+            return patched
+        K = max(self.tile_width, new_csr.max_degree())
+        tiles = _halo_tiles(
+            new_csr,
+            self.num_shards,
+            self.order,
+            self.bounds,
+            self.sizes,
+            self.rows_per_shard,
+            K,
+            self.shard_of,
+            self.local_of,
+        )
+        return dataclasses.replace(self, csr=new_csr, **tiles)
+
     # -- row <-> shard layout conversions ---------------------------------
     def pad_rows(self, x, fill=0):
         """(n, ...) per-agent array -> (S, R, ...) shard layout, ``fill`` pads."""
@@ -387,25 +465,69 @@ def partition_graph(
         shard_of[ids] = s
         local_of[ids] = np.arange(hi - lo, dtype=np.int32)
 
+    tiles = _halo_tiles(csr, S, order, bounds, sizes, R, K, shard_of, local_of)
+    return GraphPartition(
+        csr=csr,
+        num_shards=S,
+        mode=mode,
+        relabel=relabel_mode,
+        order=order,
+        bounds=bounds,
+        owned=owned,
+        sizes=sizes,
+        shard_of=shard_of,
+        local_of=local_of,
+        **tiles,
+    )
+
+
+def _row_gather(csr: CSRGraph, ids: np.ndarray):
+    """Flat CSR gather of the rows ``ids`` (preserving per-row order).
+
+    Returns ``(cols, vals, deg, offs)`` where ``offs[e]`` is edge ``e``'s
+    position within its row — reused by the tile builds as the tile
+    column coordinate. Reduces to the indptr slice when ``ids`` is a
+    contiguous identity range.
+    """
+    indptr = np.asarray(csr.indptr, dtype=np.int64)
+    deg = np.diff(indptr)[ids]
+    total = int(deg.sum())
+    offs = np.arange(total, dtype=np.int64) - np.repeat(np.cumsum(deg) - deg, deg)
+    flat = np.repeat(indptr[ids], deg) + offs
+    return csr.indices[flat].astype(np.int64), csr.data[flat], deg, offs
+
+
+def _halo_tiles(
+    csr: CSRGraph,
+    S: int,
+    order: np.ndarray,
+    bounds: np.ndarray,
+    sizes: np.ndarray,
+    R: int,
+    K: int,
+    shard_of: np.ndarray,
+    local_of: np.ndarray,
+) -> dict:
+    """Halo/border/exchange maps + neighbour tiles for a frozen ownership.
+
+    The second half of :func:`partition_graph`, split out so
+    :meth:`GraphPartition.patch` can rebind a changed graph to an
+    existing cut (order/bounds/ownership untouched) without paying for
+    the relabel pass or the block cut again. Returns the field dict
+    ``{halo, halo_sizes, halo_owner, border, border_sizes, halo_src,
+    idx, w}``.
+    """
+    n = csr.n
     # Flat CSR row gathers per shard (reduces to the indptr slice when the
     # order is the identity): cols/vals keep the original per-row
     # neighbour order, which the bit-exactness guarantee rests on.
-    indptr = np.asarray(csr.indptr, dtype=np.int64)
-    deg_all = np.diff(indptr)
     shard_cols, shard_vals, shard_degs, shard_offs = [], [], [], []
     halos = []
     for s in range(S):
         lo, hi = int(bounds[s]), int(bounds[s + 1])
-        ids = order[lo:hi]
-        deg = deg_all[ids]
-        total = int(deg.sum())
-        # offs[e] = position of edge e within its row; reused by the tile
-        # build below as the tile column coordinate.
-        offs = np.arange(total, dtype=np.int64) - np.repeat(np.cumsum(deg) - deg, deg)
-        flat = np.repeat(indptr[ids], deg) + offs
-        cols = csr.indices[flat].astype(np.int64)
+        cols, vals, deg, offs = _row_gather(csr, order[lo:hi])
         shard_cols.append(cols)
-        shard_vals.append(csr.data[flat])
+        shard_vals.append(vals)
         shard_degs.append(deg)
         shard_offs.append(offs)
         halos.append(np.unique(cols[shard_of[cols] != s]).astype(np.int32))
@@ -462,17 +584,7 @@ def partition_graph(
         )
         idx[s, rows_local, pos] = local_cols.astype(np.int32)
         w[s, rows_local, pos] = vals
-    return GraphPartition(
-        csr=csr,
-        num_shards=S,
-        mode=mode,
-        relabel=relabel_mode,
-        order=order,
-        bounds=bounds,
-        owned=owned,
-        sizes=sizes,
-        shard_of=shard_of,
-        local_of=local_of,
+    return dict(
         halo=halo,
         halo_sizes=halo_sizes,
         halo_owner=halo_owner,

@@ -31,6 +31,11 @@ Semantics (recorded deviations / modelling choices):
   clock rate by ``1 - drop_prob``; it exists as a separate knob so that
   device speed classes (``rates``) and loss processes (``drop_prob``)
   can be configured and swept independently.
+* **Arrival** — agents the topology has never seen join mid-run at
+  scheduled slots, attach to established peers, and (optionally) warm
+  start from the Eq. 16 model-propagation step over their new
+  neighbours; see :class:`ArrivalConfig`. Requires the engine's
+  dynamic-topology mode (it is a structural graph change).
 """
 
 from __future__ import annotations
@@ -101,12 +106,87 @@ class StragglerConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ArrivalConfig:
+    """Agents *arriving* mid-run: they join the graph and start learning.
+
+    Where :class:`ChurnConfig` models departure/rejoin of agents the
+    graph already knows, arrival adds agents the topology has never
+    seen. The engine holds the scheduled ids inactive (never woken,
+    weight-0 edges) until their slot, then attaches them to the live
+    graph and — with ``warm_start`` — initializes their model by the
+    Eq. 16 model-propagation step with confidence ``c_i = 0``: a pure
+    weighted neighbour average, iterated ``warm_rounds`` times. That is
+    exactly the propagation fixed-point semantics for an agent with no
+    local data yet (arXiv 1610.05202); a cold start keeps the agent's
+    initial row instead.
+
+    ``schedule``: tuple of ``(slot, ids)`` pairs in absolute slot-counter
+    terms — at the *start* of that slot the listed agents join.
+    ``attach``: optional explicit ``{agent id: (neighbour ids,)}`` map;
+    ids without an entry attach to ``attach_k`` established agents drawn
+    deterministically from ``seed``. Edge changes land at slot
+    boundaries, like every topology update (see docs/DEVIATIONS.md).
+    """
+
+    schedule: tuple[tuple[int, tuple[int, ...]], ...] = ()
+    attach_k: int = 4
+    attach_weight: float = 1.0
+    attach: dict | None = None
+    warm_start: bool = True
+    warm_rounds: int = 2
+    seed: int = 0
+
+    def __post_init__(self):
+        seen: set[int] = set()
+        for slot, ids in self.schedule:
+            if slot < 1:
+                raise ValueError(
+                    f"arrival slots are 1-based slot counts, got {slot}"
+                )
+            dup = seen.intersection(ids)
+            if dup:
+                raise ValueError(f"agents scheduled to arrive twice: {sorted(dup)}")
+            seen.update(ids)
+        if self.attach_k < 1:
+            raise ValueError("attach_k must be >= 1")
+        if self.warm_rounds < 1:
+            raise ValueError("warm_rounds must be >= 1")
+
+    def all_ids(self) -> tuple[int, ...]:
+        """Every agent id that arrives at some point, schedule order."""
+        return tuple(i for _, ids in self.schedule for i in ids)
+
+    def by_slot(self) -> dict[int, tuple[int, ...]]:
+        """{slot: ids arriving at its start}, merged across schedule entries."""
+        out: dict[int, tuple[int, ...]] = {}
+        for slot, ids in self.schedule:
+            out[slot] = out.get(slot, ()) + tuple(ids)
+        return dict(sorted(out.items()))
+
+    def neighbors_for(self, agent: int, established, rng) -> np.ndarray:
+        """Attachment targets for ``agent``: explicit map or random draw.
+
+        ``established``: (m,) candidate ids (active, already-joined
+        agents). The random draw is without replacement, capped at the
+        candidate count.
+        """
+        if self.attach and agent in self.attach:
+            return np.asarray(self.attach[agent], dtype=np.int64)
+        established = np.asarray(established, dtype=np.int64)
+        k = min(self.attach_k, len(established))
+        if k < 1:
+            raise ValueError(f"no established agents for arrival of {agent}")
+        return rng.choice(established, size=k, replace=False)
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """Bundle of deployment conditions; ``None`` disables a dimension."""
 
     churn: ChurnConfig | None = None
     delay: DelayConfig | None = None
     straggler: StragglerConfig | None = None
+    arrival: ArrivalConfig | None = None
 
     @staticmethod
     def ideal() -> "Scenario":

@@ -479,3 +479,109 @@ class PropagationUpdate:
             self.graph, np.asarray(self.theta_loc), self.mu, np.asarray(self.confidences)
         )
         return float(value(np.asarray(Theta)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphUpdate:
+    """Dada-style sparse similarity-driven edge refresh (arXiv 1901.08460).
+
+    Zantedeschi et al. alternate model updates with a graph step that
+    re-selects each node's edges from its current *model* similarity —
+    their ``Node``/``set_edges`` alternation. This is that step as a
+    host-side refresh the engines fire every ``every`` slots, at slot
+    boundaries (the model super-ticks in between run on the frozen
+    topology; see docs/DEVIATIONS.md):
+
+    1. **Candidates** — every current edge plus ``candidates`` random
+       never-self peers per node (the sparse stand-in for the dense all
+       pairs similarity Dada's centralized variant uses).
+    2. **Similarity** — ``w_ij = exp(-||Theta_i - Theta_j||^2 / gamma)``
+       over candidate pairs only.
+    3. **Selection** — per row keep the top-``k`` by similarity, always
+       retaining the single best (so every degree stays >= 1: Eq. 4
+       divides by D_ii) and dropping the rest below ``threshold``; then
+       OR-symmetrize, exactly like the k-NN constructors.
+
+    The refresh is deterministic in ``(seed, round_index)``, so a run is
+    reproducible and the sharded engine can replay the identical graph
+    sequence on every host.
+    """
+
+    every: int = 10
+    k: int = 10
+    candidates: int = 8
+    gamma: float = 1.0
+    threshold: float = 1e-4
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError("every must be >= 1 slots")
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+        if self.candidates < 0:
+            raise ValueError("candidates must be >= 0")
+        if self.gamma <= 0.0:
+            raise ValueError("gamma must be > 0")
+
+    def refresh(self, csr, Theta, round_index: int = 0, allowed=None):
+        """One edge-update round: (current graph, models) -> new graph.
+
+        ``csr``: the live :class:`repro.core.graph.CSRGraph`; ``Theta``:
+        (n, p) current models; ``round_index``: which refresh this is
+        (seeds the candidate draw). ``allowed``: optional (n,) bool mask —
+        only edges between allowed agents are re-selected; existing edges
+        touching a non-allowed agent pass through frozen at their current
+        weight (how the engines keep not-yet-arrived agents detached and
+        departed agents' caches mixed). Host-side numpy, O(n * (deg + c)).
+        """
+        from repro.core.graph import csr_from_coo
+
+        Theta = np.asarray(Theta, dtype=np.float64)
+        n = csr.n
+        rows = csr.row_ids().astype(np.int64)
+        cols = csr.indices.astype(np.int64)
+        if allowed is not None:
+            allowed = np.asarray(allowed, dtype=bool)
+            live = allowed[rows] & allowed[cols]
+            frozen = (rows[~live], cols[~live], np.asarray(csr.data, np.float64)[~live])
+            rows, cols = rows[live], cols[live]
+        else:
+            frozen = None
+        if self.candidates > 0 and n > 1:
+            rng = np.random.default_rng((self.seed, round_index))
+            c = min(self.candidates, n - 1)
+            # i + U{1, .., n-1} mod n is never i — no self candidates.
+            rand = (
+                np.arange(n, dtype=np.int64)[:, None]
+                + rng.integers(1, n, size=(n, c))
+            ) % n
+            crows = np.repeat(np.arange(n, dtype=np.int64), c)
+            ccols = rand.ravel()
+            if allowed is not None:
+                # Draw for every row (stable rng stream), then filter.
+                mask = allowed[crows] & allowed[ccols]
+                crows, ccols = crows[mask], ccols[mask]
+            rows = np.concatenate([rows, crows])
+            cols = np.concatenate([cols, ccols])
+        # Dedupe directed candidate pairs.
+        key = rows * n + cols
+        _, uniq = np.unique(key, return_index=True)
+        rows, cols = rows[uniq], cols[uniq]
+        d2 = ((Theta[rows] - Theta[cols]) ** 2).sum(axis=1)
+        vals = np.exp(-d2 / self.gamma)
+        # Per-row top-k: rank candidates within each row by -similarity.
+        order = np.lexsort((-vals, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        first = np.concatenate([[True], rows[1:] != rows[:-1]])
+        start = np.maximum.accumulate(np.where(first, np.arange(len(rows)), 0))
+        rank = np.arange(len(rows)) - start
+        # The row's best candidate always survives (D_ii > 0 for Eq. 4);
+        # beyond it, keep top-k entries above the negligibility floor.
+        keep = (rank == 0) | ((rank < self.k) & (vals >= self.threshold))
+        rows, cols, vals = rows[keep], cols[keep], vals[keep]
+        if frozen is not None:
+            rows = np.concatenate([rows, frozen[0]])
+            cols = np.concatenate([cols, frozen[1]])
+            vals = np.concatenate([vals, frozen[2]])
+        return csr_from_coo(n, rows, cols, vals, symmetrize=True, dedupe="max")

@@ -1,0 +1,146 @@
+"""Property tests (hypothesis): CSR invariants under random edge churn.
+
+The dynamic-topology layer edits graphs as COO batches routed through
+``csr_from_coo`` (``TopologyState.apply_edge_updates``, the engines'
+attach/detach paths, ``GraphUpdate``'s selection). These properties
+assert that ANY random insert/delete batch round-trips into a CSR that
+keeps the class invariants — sorted unique columns per row, exact
+symmetry, zero diagonal, non-negative weights — and that an insert
+followed by deleting the same edges returns the original edge set.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)"
+)
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import TopologyState, csr_from_coo
+
+
+def _base_graph(n: int, seed: int):
+    """Random connected-ish symmetric CSR: a ring plus random chords."""
+    rng = np.random.default_rng(seed)
+    rows = np.arange(n, dtype=np.int64)
+    cols = (rows + 1) % n
+    vals = rng.uniform(0.1, 1.0, size=n)
+    extra = max(n // 2, 1)
+    er = rng.integers(0, n, size=extra)
+    ec = rng.integers(0, n, size=extra)
+    ev = rng.uniform(0.1, 1.0, size=extra)
+    keep = er != ec
+    return csr_from_coo(
+        n,
+        np.concatenate([rows, er[keep]]),
+        np.concatenate([cols, ec[keep]]),
+        np.concatenate([vals, ev[keep]]),
+        symmetrize=True,
+    )
+
+
+def _edge_dict(csr):
+    rows = csr.row_ids()
+    return {
+        (int(i), int(j)): float(v) for i, j, v in zip(rows, csr.indices, csr.data)
+    }
+
+
+def _assert_invariants(csr):
+    n = csr.n
+    assert csr.indptr[0] == 0 and csr.indptr[-1] == len(csr.indices)
+    assert (np.diff(csr.indptr) >= 0).all()
+    rows = csr.row_ids()
+    # Sorted, unique columns within each row; no self loops; weights > 0.
+    for i in range(n):
+        nb = csr.indices[csr.indptr[i] : csr.indptr[i + 1]]
+        assert (np.diff(nb) > 0).all(), f"row {i} columns not sorted-unique"
+    assert not np.any(csr.indices == rows)
+    assert (csr.data > 0.0).all()
+    # Exact symmetry of the (i, j) -> w map.
+    edges = _edge_dict(csr)
+    for (i, j), v in edges.items():
+        assert edges.get((j, i)) == v, (i, j)
+
+
+churn_params = st.tuples(
+    st.integers(min_value=3, max_value=20),  # n
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+    st.integers(min_value=1, max_value=12),  # batch size
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(churn_params)
+def test_random_insert_delete_batches_preserve_csr_invariants(params):
+    n, seed, b = params
+    csr = _base_graph(n, seed)
+    _assert_invariants(csr)
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    for _ in range(3):
+        # Random insert batch (may duplicate existing edges or each other).
+        ar = rng.integers(0, n, size=b)
+        ac = rng.integers(0, n, size=b)
+        av = rng.uniform(0.05, 2.0, size=b)
+        ok = ar != ac
+        rows, cols, vals = csr.row_ids(), csr.indices, csr.data
+        csr = csr_from_coo(
+            n,
+            np.concatenate([rows, ar[ok], ac[ok]]),
+            np.concatenate([cols, ac[ok], ar[ok]]),
+            np.concatenate([vals, av[ok], av[ok]]),
+            symmetrize=True,
+            dedupe="max",
+        )
+        _assert_invariants(csr)
+        # Random delete batch: drop some existing undirected edges.
+        edges = sorted(_edge_dict(csr))
+        if edges:
+            picks = rng.integers(0, len(edges), size=min(b, len(edges)))
+            drop = {tuple(sorted(edges[k])) for k in picks}
+            rows, cols, vals = csr.row_ids(), csr.indices, csr.data
+            keep = np.array(
+                [tuple(sorted((int(i), int(j)))) not in drop
+                 for i, j in zip(rows, cols)]
+            )
+            csr = csr_from_coo(n, rows[keep], cols[keep], vals[keep])
+            _assert_invariants(csr)
+
+
+@settings(max_examples=30, deadline=None)
+@given(churn_params)
+def test_topology_state_insert_then_delete_round_trips(params):
+    """apply_edge_updates(add) then apply_edge_updates(remove) of the same
+    novel pairs returns exactly the original edge set (weights included),
+    with the version advanced by two."""
+    n, seed, b = params
+    csr = _base_graph(n, seed)
+    before = _edge_dict(csr)
+    topo = TopologyState.from_csr(csr)
+    rng = np.random.default_rng(seed ^ 0xC0FFEE)
+    # Pick pairs that are NOT current edges (so deletion restores exactly).
+    cand_r = rng.integers(0, n, size=4 * b)
+    cand_c = rng.integers(0, n, size=4 * b)
+    novel, seen = [], set()
+    for i, j in zip(cand_r, cand_c):
+        key = tuple(sorted((int(i), int(j))))
+        if i != j and key not in before and key not in seen:
+            novel.append(key)
+            seen.add(key)
+        if len(novel) == b:
+            break
+    if not novel:
+        return
+    ar = np.array([i for i, _ in novel])
+    ac = np.array([j for _, j in novel])
+    grown = topo.apply_edge_updates(
+        add_rows=ar, add_cols=ac, add_vals=rng.uniform(0.1, 1.0, size=len(novel))
+    )
+    _assert_invariants(grown.to_csr())
+    assert grown.to_csr().num_edges() == csr.num_edges() + len(novel)
+    shrunk = grown.apply_edge_updates(remove_rows=ar, remove_cols=ac)
+    after = _edge_dict(shrunk.to_csr())
+    assert after == before
+    assert int(np.asarray(shrunk.version)) == 2

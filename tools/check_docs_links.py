@@ -1,4 +1,4 @@
-"""Check that relative markdown links in README.md and docs/ resolve.
+"""Check that relative markdown links in README.md, ROADMAP.md and docs/ resolve.
 
 Scans ``[text](target)`` links (and reference-style ``[text]: target``
 definitions), skips absolute URLs / anchors / mailto, resolves each
@@ -46,7 +46,11 @@ def check_file(md: Path, root: Path) -> list[str]:
 def main() -> int:
     """Check every tracked markdown file; return a process exit code."""
     root = Path(__file__).resolve().parent.parent
-    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    files = [
+        root / "README.md",
+        root / "ROADMAP.md",
+        *sorted((root / "docs").glob("*.md")),
+    ]
     errors = []
     checked = 0
     for md in files:
