@@ -210,6 +210,25 @@ def _bench_dynamic_topology(full, rows, record):
     record("dynamic_topology", t0, f"n={kw['n']},patch_speedup={speedup:.3g}")
 
 
+def _bench_checkpoint(full, rows, record):
+    t0 = time.time()
+    kw = dict(n=200_000, shards=8) if full else dict(n=20_000, shards=8)
+    # Engine save/restore round trip at scale: wall seconds each way plus
+    # entry bytes, all per-shard with no (n, p) host materialization.
+    sub = _subprocess_bench(
+        "benchmarks.bench_checkpoint",
+        ["--n", str(kw["n"]), "--shards", str(kw["shards"])],
+        "ckpt_",
+    )
+    rows.extend(sub)
+    save_s = next((v for name, v, _ in sub if name == "ckpt_save_s"), None)
+    nbytes = next((v for name, v, _ in sub if name == "ckpt_bytes"), None)
+    if save_s is None or nbytes is None:
+        raise RuntimeError("checkpoint bench printed no ckpt_save_s/ckpt_bytes rows")
+    record("checkpoint", t0,
+           f"n={kw['n']},shards=8,save_s={save_s:.3g},bytes={int(nbytes)}")
+
+
 def _bench_roofline(full, rows, record):
     from benchmarks import bench_roofline
 
@@ -237,6 +256,7 @@ BENCHES = {
     "sharded_engine": _bench_sharded_engine,
     "obs": _bench_obs,
     "dynamic_topology": _bench_dynamic_topology,
+    "checkpoint": _bench_checkpoint,
     "roofline": _bench_roofline,
 }
 

@@ -16,10 +16,19 @@ land on the same fixed point.
 
 Run:  PYTHONPATH=src python examples/sharded_async_simulation.py
       PYTHONPATH=src python examples/sharded_async_simulation.py --smoke   # CI-sized
+
+Crash-safe resume (the CI checkpoint lane drives exactly this pair)::
+
+    # write rotating checkpoints, then die mid-run (exit code 7)
+    python examples/sharded_async_simulation.py --smoke \
+        --checkpoint-dir ckpts --checkpoint-every 4 --kill-after 8
+    # pick up from the newest valid entry and finish (parity assert included)
+    python examples/sharded_async_simulation.py --smoke \
+        --checkpoint-dir ckpts --checkpoint-every 4 --resume
 """
 
+import argparse
 import os
-import sys
 
 # Must happen before jax initializes: split the CPU into 4 host devices.
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
@@ -38,8 +47,11 @@ from repro.sim import (  # noqa: E402
 )
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, checkpoint_dir=None, checkpoint_every=0,
+         keep_last=3, resume=False, kill_after=0):
     import jax
+
+    from repro.checkpoint import restore, save_engine_checkpoint
 
     rng = np.random.default_rng(0)
     n, p, m, shards = (2_000, 4, 8, 4) if smoke else (20_000, 8, 16, 4)
@@ -80,7 +92,29 @@ def main(smoke: bool = False):
         f"{base.exchange_rows('all_gather')} unrelabeled all_gather"
     )
 
-    res = eng.run(Theta0, slots=slots, record_every=record_every)
+    if kill_after > 0:
+        # CI crash rehearsal: checkpoint every few slots, then die hard
+        # mid-run (no atexit, no cleanup — exactly like a preempted node).
+        assert checkpoint_dir is not None and checkpoint_every > 0
+        eng.run(Theta0, slots=min(kill_after, slots),
+                checkpoint_every=checkpoint_every, checkpoint_dir=checkpoint_dir,
+                checkpoint_keep_last=keep_last)
+        print(f"[kill]     checkpointed through slot {min(kill_after, slots)}, dying now")
+        os._exit(7)
+
+    state0, start = None, 0
+    if resume:
+        state0, start = restore(eng, checkpoint_dir)
+        print(f"[resume]   picked up slot {start} from {checkpoint_dir}")
+    res = eng.run(
+        Theta0,
+        slots=slots - start,
+        record_every=record_every,
+        state=state0,
+        checkpoint_every=checkpoint_every,
+        checkpoint_dir=checkpoint_dir if checkpoint_every > 0 else None,
+        checkpoint_keep_last=keep_last,
+    )
     print("[sharded]  Q:", " -> ".join(f"{q:.1f}" for q in res.objective))
     print(
         f"           {res.wakes_applied} wakes over {res.slots} super-ticks, "
@@ -121,4 +155,17 @@ def main(smoke: bool = False):
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv[1:])
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="CI-sized problem")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="slots between rotating engine checkpoints (0 = off)")
+    ap.add_argument("--keep-last", type=int, default=3)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid entry and finish the run")
+    ap.add_argument("--kill-after", type=int, default=0,
+                    help="checkpoint through this many slots then os._exit(7)")
+    a = ap.parse_args()
+    main(smoke=a.smoke, checkpoint_dir=a.checkpoint_dir,
+         checkpoint_every=a.checkpoint_every, keep_last=a.keep_last,
+         resume=a.resume, kill_after=a.kill_after)

@@ -1,3 +1,21 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+"""Crash-safe checkpointing: bare pytrees and full engine resume closures."""
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+from repro.checkpoint.checkpoint import (
+    CheckpointError,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.checkpoint.engine_io import (
+    engine_fingerprint,
+    restore,
+    save_engine_checkpoint,
+)
+
+__all__ = [
+    "CheckpointError",
+    "save_checkpoint",
+    "load_checkpoint",
+    "save_engine_checkpoint",
+    "restore",
+    "engine_fingerprint",
+]

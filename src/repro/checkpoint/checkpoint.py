@@ -1,84 +1,369 @@
-"""Dependency-free sharded checkpointing: npz shards + JSON manifest.
+"""Crash-safe, shard-friendly pytree checkpointing.
 
-Layout:
-    <dir>/manifest.json   — pytree structure, leaf dtypes/shapes, step, extra
-    <dir>/shard_<k>.npz   — flat leaves, chunked so no single file exceeds
-                            ``max_shard_bytes``
+A checkpoint is a directory: numbered ``shard_*.npz`` array files plus a
+``manifest.json`` carrying the step, user extras, a structure digest
+(leaf paths + dtypes + shapes) verified against the ``like`` tree on
+load, and a sha256 per file. Writes stage into ``<dir>.tmp`` (every file
+fsynced, the manifest written last) and atomically rename into place — a
+writer killed mid-save can never leave a directory that loads. With
+``keep_last=K`` the target path is a *rotation root* holding
+``ckpt-<step>`` entries; loading a root falls back to the newest entry
+that verifies, so a torn newest write recovers the previous one.
 
-Works for any pytree of arrays (params, P2P agent-stacked params, optimizer
-state). Loading restores exact dtypes (bf16 round-trips via uint16 views).
+bf16 arrays round-trip through a uint16 view (npz has no bfloat16).
+:mod:`repro.checkpoint.engine_io` builds the engine-aware layer (full
+``AsyncEngine``/``ShardedAsyncEngine`` resume closures, per-shard files,
+shard-count-elastic restore) on the same entry primitives.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _BF16 = "bfloat16"
+_MANIFEST = "manifest.json"
+_FORMAT = 2
+
+
+class CheckpointError(ValueError):
+    """A checkpoint directory is torn, corrupted, or structurally wrong."""
+
+
+# ---------------------------------------------------------------------------
+# Leaf <-> numpy codecs
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    """Flatten a jax key-path into a stable ``a/b/0`` string."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _flatten_with_paths(tree):
+    """``(path_str, leaf)`` pairs plus the treedef, in canonical order."""
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(p), leaf) for p, leaf in leaves_p], treedef
 
 
 def _to_numpy(x):
+    """Host array + recorded dtype name (bf16 ships as a uint16 view)."""
     arr = np.asarray(x)
     if arr.dtype == jnp.bfloat16:
         return arr.view(np.uint16), _BF16
     return arr, str(arr.dtype)
 
 
-def save_checkpoint(path, tree, step=0, extra=None, max_shard_bytes=1 << 30):
-    os.makedirs(path, exist_ok=True)
-    leaves, treedef = jax.tree.flatten(tree)
-    manifest = {
-        "step": int(step),
-        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
-        if False else None,  # structure stored via flatten paths below
-        "paths": [],
-        "extra": extra or {},
-        "shards": [],
-    }
-    # store key paths for structure-checked reload
-    paths = [
-        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
-        for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
-    ]
-    manifest["paths"] = paths
+def _from_numpy(arr, dtype: str):
+    """Invert :func:`_to_numpy` (restores the bf16 view)."""
+    if dtype == _BF16:
+        return arr.view(jnp.bfloat16)
+    return arr
 
-    shard, shard_bytes, shard_idx = {}, 0, 0
-    for i, leaf in enumerate(leaves):
+
+def _leaf_dtype_name(leaf) -> str:
+    """Recorded dtype name of a template leaf (``'bfloat16'`` for bf16)."""
+    dt = getattr(leaf, "dtype", None)
+    if dt is None:
+        dt = np.asarray(leaf).dtype
+    return str(dt)
+
+
+def structure_digest(records) -> str:
+    """sha256 over ``(path, dtype, shape)`` triples — the tree's identity."""
+    h = hashlib.sha256()
+    for path, dtype, shape in records:
+        h.update(f"{path}|{dtype}|{tuple(shape)}\n".encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe entry I/O (shared with engine_io)
+# ---------------------------------------------------------------------------
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_entry(entry: str, files: dict, manifest: dict) -> str:
+    """Crash-safely materialize ``entry/`` from ``{filename: {key: array}}``.
+
+    Everything stages under ``<entry>.tmp`` — each npz fsynced, its
+    sha256 recorded, the manifest written (and fsynced) last — then one
+    atomic rename publishes the directory. A crash at any earlier point
+    leaves only a ``.tmp`` directory, which no loader ever counts.
+    """
+    tmp = entry + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    hashes = {}
+    for name, arrays in files.items():
+        fp = os.path.join(tmp, name)
+        np.savez(fp, **arrays)
+        with open(fp, "rb+") as f:
+            os.fsync(f.fileno())
+        hashes[name] = _sha256_file(fp)
+    manifest = dict(manifest, format=_FORMAT, file_sha256=hashes)
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    if os.path.exists(entry):
+        old = entry + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(entry, old)
+        os.rename(tmp, entry)
+        shutil.rmtree(old)
+    else:
+        os.rename(tmp, entry)
+    _fsync_dir(os.path.dirname(os.path.abspath(entry)))
+    return entry
+
+
+def _save_entry(path: str, files: dict, manifest: dict, step: int, keep_last):
+    """Write one entry at ``path`` (or into its ``keep_last`` rotation)."""
+    if keep_last is not None:
+        keep = int(keep_last)
+        if keep < 1:
+            raise ValueError("keep_last must be >= 1")
+        os.makedirs(path, exist_ok=True)
+        entry = _write_entry(
+            os.path.join(path, f"ckpt-{int(step):012d}"), files, manifest
+        )
+        _prune_rotation(path, keep)
+        return entry
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    return _write_entry(path, files, manifest)
+
+
+def _read_manifest(entry: str) -> dict:
+    mp = os.path.join(entry, _MANIFEST)
+    if not os.path.isfile(mp):
+        raise CheckpointError(
+            f"{entry}: no {_MANIFEST} (torn write or foreign directory)"
+        )
+    try:
+        with open(mp) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"{entry}: unreadable manifest: {e}") from e
+
+
+def _verify_entry(entry: str) -> dict:
+    """Manifest + per-file sha256 check; CheckpointError on a torn entry."""
+    manifest = _read_manifest(entry)
+    for name, want in manifest.get("file_sha256", {}).items():
+        fp = os.path.join(entry, name)
+        if not os.path.isfile(fp):
+            raise CheckpointError(f"{entry}: missing file {name} (torn write)")
+        got = _sha256_file(fp)
+        if got != want:
+            raise CheckpointError(
+                f"{entry}: {name} sha256 mismatch (torn or corrupted write): "
+                f"{got[:12]} != {want[:12]}"
+            )
+    return manifest
+
+
+def _rotation_entries(root: str) -> list[str]:
+    """``ckpt-*`` entries under ``root``, newest step first.
+
+    ``*.tmp`` / ``*.old`` staging leftovers are never candidates.
+    """
+    names = [
+        name
+        for name in os.listdir(root)
+        if name.startswith("ckpt-")
+        and not name.endswith((".tmp", ".old"))
+        and os.path.isdir(os.path.join(root, name))
+    ]
+
+    def step_of(name: str) -> int:
+        try:
+            return int(name.split("-", 1)[1])
+        except ValueError:
+            return -1
+
+    return [os.path.join(root, n) for n in sorted(names, key=step_of, reverse=True)]
+
+
+def _prune_rotation(root: str, keep_last: int) -> None:
+    for entry in _rotation_entries(root)[keep_last:]:
+        shutil.rmtree(entry)
+
+
+def _resolve_entry(path: str):
+    """Map ``path`` (one entry, or a rotation root) to a verified entry.
+
+    Returns ``(entry, manifest)``. A rotation root falls back across its
+    entries newest-first; FileNotFoundError when nothing was ever
+    written, CheckpointError when entries exist but none verifies.
+    """
+    if not os.path.isdir(path):
+        raise FileNotFoundError(f"no checkpoint at {path}")
+    if os.path.isfile(os.path.join(path, _MANIFEST)):
+        return path, _verify_entry(path)
+    entries = _rotation_entries(path)
+    if not entries:
+        raise FileNotFoundError(f"no checkpoint entries under {path}")
+    errors = []
+    for entry in entries:
+        try:
+            return entry, _verify_entry(entry)
+        except CheckpointError as e:
+            errors.append(str(e))
+    raise CheckpointError(
+        f"{path}: no valid checkpoint among {len(entries)} entries:\n"
+        + "\n".join(errors)
+    )
+
+
+def _load_arrays(entry: str, manifest: dict) -> dict:
+    """All arrays of a verified entry, keyed as saved."""
+    data: dict = {}
+    for name in manifest.get("file_sha256", {}):
+        if not name.endswith(".npz"):
+            continue
+        with np.load(os.path.join(entry, name)) as z:
+            for k in z.files:
+                data[k] = z[k]
+    return data
+
+
+# ---------------------------------------------------------------------------
+# Pytree checkpoint API
+# ---------------------------------------------------------------------------
+
+
+def save_checkpoint(path, tree, step=0, extra=None, max_shard_bytes=1 << 30,
+                    keep_last=None):
+    """Write ``tree`` (any pytree of arrays) as one crash-safe checkpoint.
+
+    Leaves are grouped into ``shard_*.npz`` files of at most
+    ``max_shard_bytes`` each (a single larger leaf gets its own file);
+    the manifest records ``step``, the JSON-serializable ``extra``, every
+    leaf's path/dtype/shape plus a structure digest, and per-file sha256.
+    With ``keep_last=K``, ``path`` is a rotation root and the entry lands
+    at ``path/ckpt-<step>`` with only the newest K entries retained.
+    Returns the entry directory actually written.
+    """
+    flat, _ = _flatten_with_paths(tree)
+    leaves = []
+    files: dict[str, dict[str, np.ndarray]] = {}
+    shard: dict[str, np.ndarray] = {}
+    shard_bytes = 0
+
+    def flush():
+        nonlocal shard, shard_bytes
+        if shard:
+            files[f"shard_{len(files)}.npz"] = shard
+            shard, shard_bytes = {}, 0
+
+    for i, (pth, leaf) in enumerate(flat):
         arr, dt = _to_numpy(leaf)
-        shard[f"leaf_{i}"] = arr
-        manifest.setdefault("dtypes", {})[f"leaf_{i}"] = dt
+        key = f"leaf_{i}"
+        shard[key] = arr
         shard_bytes += arr.nbytes
+        leaves.append(
+            {"key": key, "path": pth, "dtype": dt, "shape": list(arr.shape)}
+        )
         if shard_bytes >= max_shard_bytes:
-            np.savez(os.path.join(path, f"shard_{shard_idx}.npz"), **shard)
-            manifest["shards"].append({"file": f"shard_{shard_idx}.npz", "keys": list(shard)})
-            shard, shard_bytes, shard_idx = {}, 0, shard_idx + 1
-    if shard:
-        np.savez(os.path.join(path, f"shard_{shard_idx}.npz"), **shard)
-        manifest["shards"].append({"file": f"shard_{shard_idx}.npz", "keys": list(shard)})
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+            flush()
+    flush()
+    manifest = {
+        "kind": "pytree",
+        "step": int(step),
+        "extra": extra or {},
+        "leaves": leaves,
+        "structure": structure_digest(
+            (r["path"], r["dtype"], r["shape"]) for r in leaves
+        ),
+    }
+    return _save_entry(path, files, manifest, step, keep_last)
+
+
+def _check_structure(entry: str, records, like_flat) -> None:
+    """Compare the manifest leaf records against the ``like`` tree.
+
+    Raises a CheckpointError naming the first mismatch (leaf set, dtype,
+    or shape) — the readable form of the structure-digest check.
+    """
+    saved_paths = [r["path"] for r in records]
+    like_paths = [p for p, _ in like_flat]
+    if saved_paths != like_paths:
+        missing = [p for p in saved_paths if p not in like_paths]
+        added = [p for p in like_paths if p not in saved_paths]
+        raise CheckpointError(
+            f"{entry}: tree structure mismatch — checkpoint has "
+            f"{len(saved_paths)} leaves, `like` has {len(like_paths)}"
+            + (f"; only in checkpoint: {missing[:4]}" if missing else "")
+            + (f"; only in `like`: {added[:4]}" if added else "")
+        )
+    for rec, (pth, ref) in zip(records, like_flat):
+        want_dtype = _leaf_dtype_name(ref)
+        if rec["dtype"] != want_dtype:
+            raise CheckpointError(
+                f"{entry}: leaf {pth!r}: checkpoint dtype {rec['dtype']} != "
+                f"{want_dtype}"
+            )
+        want_shape = tuple(np.shape(ref))
+        if tuple(rec["shape"]) != want_shape:
+            raise CheckpointError(
+                f"{entry}: leaf {pth!r}: checkpoint shape "
+                f"{tuple(rec['shape'])} != {want_shape}"
+            )
 
 
 def load_checkpoint(path, like):
-    """Restore into the structure of ``like`` (a pytree of arrays/structs)."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = {}
-    for sh in manifest["shards"]:
-        with np.load(os.path.join(path, sh["file"])) as z:
-            for k in sh["keys"]:
-                data[k] = z[k]
-    leaves_like, treedef = jax.tree.flatten(like)
-    leaves = []
-    for i, ref in enumerate(leaves_like):
-        arr = data[f"leaf_{i}"]
-        if manifest.get("dtypes", {}).get(f"leaf_{i}") == _BF16:
-            arr = arr.view(jnp.bfloat16)
-        if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(f"leaf {i}: checkpoint shape {arr.shape} != {ref.shape}")
-        leaves.append(jnp.asarray(arr))
-    return jax.tree.unflatten(treedef, leaves), manifest["step"], manifest.get("extra", {})
+    """Load a checkpoint written by :func:`save_checkpoint`.
+
+    ``path`` may be one entry or a ``keep_last`` rotation root (newest
+    valid entry wins; torn entries are skipped). ``like`` is a pytree
+    with the expected structure/dtypes/shapes — any mismatch raises
+    :class:`CheckpointError` (a ``ValueError``) naming the offending
+    leaf. Returns ``(tree, step, extra)``.
+    """
+    entry, manifest = _resolve_entry(path)
+    if manifest.get("kind") != "pytree":
+        raise CheckpointError(
+            f"{entry}: not a pytree checkpoint (kind={manifest.get('kind')!r}); "
+            "engine checkpoints load via repro.checkpoint.restore(engine, path)"
+        )
+    like_flat, treedef = _flatten_with_paths(like)
+    records = manifest["leaves"]
+    like_digest = structure_digest(
+        (p, _leaf_dtype_name(ref), list(np.shape(ref))) for p, ref in like_flat
+    )
+    if manifest.get("structure") != like_digest:
+        _check_structure(entry, records, like_flat)
+        raise CheckpointError(f"{entry}: structure digest mismatch")
+    data = _load_arrays(entry, manifest)
+    out = [jnp.asarray(_from_numpy(data[r["key"]], r["dtype"])) for r in records]
+    return (
+        jax.tree_util.tree_unflatten(treedef, out),
+        manifest["step"],
+        manifest.get("extra", {}),
+    )

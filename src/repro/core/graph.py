@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import os
 
 import numpy as np
@@ -324,6 +325,20 @@ class CSRGraph:
 
     def max_degree(self) -> int:
         return int(np.diff(self.indptr).max(initial=0))
+
+    def digest(self) -> str:
+        """sha256 over the exact CSR contents (indptr, indices, data).
+
+        The checkpoint fingerprint: two graphs digest equal iff every
+        stored edge, weight, and the row layout are byte-identical.
+        """
+        h = hashlib.sha256()
+        for a in (self.indptr, self.indices, self.data):
+            a = np.ascontiguousarray(a)
+            h.update(str(a.dtype).encode())
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
 
     def edge_list(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(rows, cols, weights) over undirected edges, one entry per i < j."""

@@ -47,6 +47,8 @@ def parse_args(argv=None):
     ap.add_argument("--no-p2p", action="store_true")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="checkpoint rotation depth (newest K entries kept)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -125,10 +127,12 @@ def main(argv=None):
                 print(json.dumps(row), flush=True)
             if args.checkpoint_dir and (step + 1) % args.checkpoint_every == 0:
                 save_checkpoint(args.checkpoint_dir, params, step=step + 1,
-                                extra={"eps_step": eps_step})
+                                extra={"eps_step": eps_step},
+                                keep_last=args.keep_last)
     if args.checkpoint_dir:
         save_checkpoint(args.checkpoint_dir, params, step=args.steps,
-                        extra={"eps_step": eps_step, "noise_scale": noise_scale})
+                        extra={"eps_step": eps_step, "noise_scale": noise_scale},
+                        keep_last=args.keep_last)
     if args.eps > 0:
         from repro.core.privacy import compose_kairouz
 

@@ -198,6 +198,19 @@ class MetricsAccumulator:
             m["last_wake"] = jnp.zeros((self.rows,), i32)
         return m
 
+    def leaf_kinds(self) -> dict:
+        """Classify each metrics leaf for the checkpoint layer.
+
+        ``"per_agent"`` leaves are keyed by agent row (``last_wake``) and
+        must be re-tiled through the partition on an elastic restore;
+        ``"counter"`` leaves are shard-additive accumulators that can be
+        summed across shards without changing any drained snapshot.
+        """
+        return {
+            k: "per_agent" if k == "last_wake" else "counter"
+            for k in self.init()
+        }
+
     # -- in-jit update -----------------------------------------------------
     def tick(
         self,

@@ -310,7 +310,13 @@ def _drive_dynamic(engine, state, slots: int, events, advance):
     for every, _cb in events:
         points.update(range(start + every, end, every))
     if gu is not None:
-        points.update(range(start + gu.every, end, gu.every))
+        # The refresh grid is *absolute* (multiples of gu.every in slot
+        # time, not offsets from this call's start), so a run split
+        # across resumes — run(k) + run(state=..., m) or a checkpoint
+        # restore — fires the same refreshes at the same slots as one
+        # run(k + m).
+        first = (start // gu.every + 1) * gu.every
+        points.update(range(first, end, gu.every))
     admissions: dict[int, tuple[int, ...]] = {}
     if arrival is not None:
         for slot, ids in arrival.by_slot().items():
@@ -319,14 +325,27 @@ def _drive_dynamic(engine, state, slots: int, events, advance):
             if pend and start <= t < end:
                 admissions[t] = pend
     points.update(admissions)
+    if (
+        gu is not None
+        and start > 0
+        and start % gu.every == 0
+        and engine.topology_log["edge_refreshes"] < start // gu.every
+    ):
+        # Resuming exactly on a grid slot whose refresh has not fired
+        # yet: the previous segment ended there (end-of-run boundaries
+        # never refresh), so this segment owes the refresh before its
+        # first super-tick. The edge_refreshes count disambiguates a
+        # pre-refresh save (end-of-segment) from a post-refresh one
+        # (interior event at the same slot).
+        state = engine._refresh_topology(state, start // gu.every)
     prev = start
     for t in sorted(points):
         if t > prev:
             state = _drive_slots(state, t - prev, engine.steps_per_chunk, advance)
         prev = t
         rel = t - start
-        if gu is not None and 0 < rel and t < end and rel % gu.every == 0:
-            state = engine._refresh_topology(state, rel // gu.every)
+        if gu is not None and start < t < end and t % gu.every == 0:
+            state = engine._refresh_topology(state, t // gu.every)
         if t in admissions:
             state = engine.admit(state, admissions[t])
         for every, cb in events:
@@ -500,6 +519,14 @@ class AsyncEngine:
             messages=jnp.zeros((), jnp.float32),
             metrics=None if self._macc is None else self._macc.init(),
         )
+
+    def state_dict(self, state: SimState, step: int | None = None):
+        """The complete resume closure as ``(files, manifest)`` — every
+        state leaf plus the live topology and its host log; what
+        :func:`repro.checkpoint.save_engine_checkpoint` writes."""
+        from repro.checkpoint.engine_io import engine_state_dict
+
+        return engine_state_dict(self, state, step=step)
 
     # -- one super-tick ----------------------------------------------------
     def _slot(self, state: SimState, wake_mask, upto: str | None = None):
@@ -925,6 +952,9 @@ class AsyncEngine:
         state: SimState | None = None,
         metrics_every: int = 0,
         report=None,
+        checkpoint_every: int = 0,
+        checkpoint_dir: str | None = None,
+        checkpoint_keep_last: int = 3,
     ) -> SimResult:
         """Drive ``slots`` super-ticks from ``Theta0`` (or a resumed state).
 
@@ -936,12 +966,23 @@ class AsyncEngine:
         ``EngineConfig(metrics=...)``) into a :class:`repro.obs.RunReport`
         returned as ``SimResult.report``; pass ``report=`` to keep
         appending to an existing one across resumed runs.
+        ``checkpoint_every`` > 0 writes a crash-safe engine checkpoint
+        into the ``checkpoint_dir`` rotation (newest
+        ``checkpoint_keep_last`` entries kept) every that many slots and
+        once at the end; resume via
+        ``repro.checkpoint.restore(engine, checkpoint_dir)`` +
+        ``run(..., state=...)``.
         """
         _check_recordable(self.update, record_every)
         if metrics_every > 0 and self._macc is None:
             raise ValueError(
                 "metrics_every requires metrics collection on; construct the "
                 "engine with EngineConfig(metrics=True) (or a MetricsSpec)"
+            )
+        if (checkpoint_every > 0) != (checkpoint_dir is not None):
+            raise ValueError(
+                "checkpoint_every and checkpoint_dir come together: pass both "
+                "(periodic checkpoints) or neither"
             )
         state = self.init_state(Theta0) if state is None else state
         record = record_every > 0
@@ -962,6 +1003,17 @@ class AsyncEngine:
                 report.add_snapshot(int(s.ptr), counters, derived)
 
             events.append((metrics_every, _drain))
+        if checkpoint_every > 0:
+            from repro.checkpoint.engine_io import save_engine_checkpoint
+
+            events.append(
+                (
+                    checkpoint_every,
+                    lambda s: save_engine_checkpoint(
+                        self, s, checkpoint_dir, keep_last=checkpoint_keep_last
+                    ),
+                )
+            )
         if self.dynamic:
             state = _drive_dynamic(
                 self,
@@ -1376,6 +1428,52 @@ class ShardedAsyncEngine:
                 lambda a: jnp.tile(a[None], (S,) + (1,) * a.ndim), self._macc.init()
             ),
         )
+
+    def _blank_state(self) -> ShardedSimState:
+        """An ``init_state``-shaped zero template built directly in the
+        (S, R, ...) tile space — the checkpoint-restore scaffold. Unlike
+        :meth:`init_state` it never assembles an (n, p) host Theta, so a
+        restore stays within the per-shard no-gather contract."""
+        part, S = self.part, self.num_shards
+        R = part.rows_per_shard
+        base = jax.random.PRNGKey(self._seed)
+        keys = jax.vmap(lambda s: jax.random.fold_in(base, s))(jnp.arange(S))
+
+        def shard_zeros(x):
+            x = jnp.asarray(x)
+            if x.ndim == 0 or x.shape[0] != self.n:
+                raise ValueError(
+                    "sharded engine needs per-agent update-state leaves with "
+                    f"leading dim n={self.n}, got shape {x.shape}"
+                )
+            return jnp.zeros((S, R) + x.shape[1:], x.dtype)
+
+        return ShardedSimState(
+            Theta=jnp.zeros((S, R, self.p), self.dtype),
+            active=jnp.zeros((S, R), bool),
+            keys=keys,
+            ustate=jax.tree.map(shard_zeros, self.update.init_state()),
+            applied=jnp.zeros(S, jnp.int32),
+            dropped=jnp.zeros(S, jnp.int32),
+            messages=jnp.zeros(S, jnp.float32),
+            ptr=jnp.zeros(S, jnp.int32),
+            ef=self.smix.init_error_feedback(self.p, self.dtype),
+            metrics=None
+            if self._macc is None
+            else jax.tree.map(
+                lambda a: jnp.tile(a[None], (S,) + (1,) * a.ndim), self._macc.init()
+            ),
+        )
+
+    def state_dict(self, state: ShardedSimState, step: int | None = None):
+        """The complete resume closure as ``(files, manifest)`` — one file
+        per shard keyed by original agent ids plus partition metadata and
+        per-shard scalars; what
+        :func:`repro.checkpoint.save_engine_checkpoint` writes. Theta is
+        never gathered to one (n, p) host array."""
+        from repro.checkpoint.engine_io import engine_state_dict
+
+        return engine_state_dict(self, state, step=step)
 
     # -- one shard-local super-tick ----------------------------------------
     def _slot_local(
@@ -1793,6 +1891,9 @@ class ShardedAsyncEngine:
         state: ShardedSimState | None = None,
         metrics_every: int = 0,
         report=None,
+        checkpoint_every: int = 0,
+        checkpoint_dir: str | None = None,
+        checkpoint_keep_last: int = 3,
     ) -> SimResult:
         """Drive ``slots`` super-ticks; same contract as :meth:`AsyncEngine.run`."""
         _check_recordable(self.update, record_every)
@@ -1800,6 +1901,11 @@ class ShardedAsyncEngine:
             raise ValueError(
                 "metrics_every requires metrics collection on; construct the "
                 "engine with EngineConfig(metrics=True) (or a MetricsSpec)"
+            )
+        if (checkpoint_every > 0) != (checkpoint_dir is not None):
+            raise ValueError(
+                "checkpoint_every and checkpoint_dir come together: pass both "
+                "(periodic checkpoints) or neither"
             )
         state = self.init_state(Theta0) if state is None else state
         record = record_every > 0
@@ -1825,6 +1931,17 @@ class ShardedAsyncEngine:
                 report.add_snapshot(int(np.asarray(s.ptr)[0]), counters, derived)
 
             events.append((metrics_every, _drain))
+        if checkpoint_every > 0:
+            from repro.checkpoint.engine_io import save_engine_checkpoint
+
+            events.append(
+                (
+                    checkpoint_every,
+                    lambda s: save_engine_checkpoint(
+                        self, s, checkpoint_dir, keep_last=checkpoint_keep_last
+                    ),
+                )
+            )
         if self.dynamic:
             state = _drive_dynamic(
                 self,

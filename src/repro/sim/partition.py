@@ -236,6 +236,24 @@ class GraphPartition:
         out[self.owned[real]] = x_sh[real]
         return out
 
+    def place_rows(self, out, ids, rows):
+        """Scatter per-agent ``rows`` (keyed by original agent ``ids``)
+        into the (S, R, ...) shard layout ``out``, in place.
+
+        The elastic-restore primitive: a checkpoint written under one cut
+        re-tiles under another by routing each owned row through this
+        partition's ``shard_of``/``local_of`` maps — no (n, ...) host
+        array is ever assembled, unlike ``pad_rows``/``unpad_rows``.
+        """
+        ids = np.asarray(ids)
+        rows = np.asarray(rows)
+        if out.shape[:2] != self.owned.shape:
+            raise ValueError(f"expected leading dims {self.owned.shape}, got {out.shape}")
+        if ids.shape[:1] != rows.shape[:1]:
+            raise ValueError(f"ids/rows leading dims differ: {ids.shape} vs {rows.shape}")
+        out[self.shard_of[ids], self.local_of[ids]] = rows
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Locality relabeling
@@ -471,6 +489,65 @@ def partition_graph(
         num_shards=S,
         mode=mode,
         relabel=relabel_mode,
+        order=order,
+        bounds=bounds,
+        owned=owned,
+        sizes=sizes,
+        shard_of=shard_of,
+        local_of=local_of,
+        **tiles,
+    )
+
+
+def partition_from_ownership(
+    csr: CSRGraph,
+    order: np.ndarray,
+    bounds: np.ndarray,
+    mode: str = "degree",
+    relabel: str | None = None,
+    tile_width: int | None = None,
+) -> GraphPartition:
+    """Rebuild a :class:`GraphPartition` from a frozen ownership.
+
+    ``order``/``bounds`` are taken verbatim (no relabel pass, no block
+    cut) and only the halo/border/exchange maps and neighbour tiles are
+    derived from ``csr`` — the same second half :meth:`GraphPartition.patch`
+    runs. This is how a checkpoint restores the *exact* partition a
+    sharded run was cut on: the saved ownership may be the product of a
+    patch chain that no ``partition_graph`` call reproduces, but given
+    (ownership, graph, tile width) the derived maps are deterministic.
+    ``mode``/``relabel`` are recorded as provenance only.
+    """
+    n = csr.n
+    order = np.asarray(order, dtype=np.int64)
+    bounds = np.asarray(bounds, dtype=np.int64)
+    if order.shape != (n,) or not np.array_equal(np.sort(order), np.arange(n)):
+        raise ValueError("order must be a permutation of arange(n)")
+    S = len(bounds) - 1
+    if S < 1 or bounds[0] != 0 or bounds[-1] != n or np.any(np.diff(bounds) <= 0):
+        raise ValueError(f"bounds must cut [0, n={n}] into non-empty blocks")
+    sizes = np.diff(bounds).astype(np.int64)
+    R = int(sizes.max())
+    K = max(csr.max_degree(), 1)
+    if tile_width is not None:
+        if tile_width < K:
+            raise ValueError(f"tile_width={tile_width} < max degree {K}")
+        K = int(tile_width)
+    owned = np.full((S, R), n, dtype=np.int32)
+    shard_of = np.empty(n, dtype=np.int32)
+    local_of = np.empty(n, dtype=np.int32)
+    for s in range(S):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        ids = order[lo:hi]
+        owned[s, : hi - lo] = ids.astype(np.int32)
+        shard_of[ids] = s
+        local_of[ids] = np.arange(hi - lo, dtype=np.int32)
+    tiles = _halo_tiles(csr, S, order, bounds, sizes, R, K, shard_of, local_of)
+    return GraphPartition(
+        csr=csr,
+        num_shards=S,
+        mode=mode,
+        relabel=relabel,
         order=order,
         bounds=bounds,
         owned=owned,

@@ -1,0 +1,200 @@
+"""Crash injection for the checkpoint layer: torn writes must never load,
+and a rotation root must always fall back to the newest entry that does.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointError, load_checkpoint, save_checkpoint
+
+
+def _tree(v=0.0, n=16):
+    return {
+        "w": jnp.full((n, 4), v, jnp.float32),
+        "b": jnp.full((n,), v, jnp.bfloat16),
+        "step_count": jnp.int32(int(v)),
+    }
+
+
+# -- rotation ----------------------------------------------------------------
+
+
+def test_rotation_keeps_last_k_and_loads_newest(tmp_path):
+    root = str(tmp_path / "rot")
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(root, _tree(step), step=step, keep_last=2)
+    entries = sorted(os.listdir(root))
+    assert entries == ["ckpt-000000000004", "ckpt-000000000005"]
+    restored, step, _ = load_checkpoint(root, _tree())
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), 5.0)
+
+
+def test_missing_or_empty_root_raises_filenotfound(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path / "nope"), _tree())
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(empty), _tree())
+
+
+def test_root_with_only_tmp_staging_raises_filenotfound(tmp_path):
+    """A writer killed before its first rename leaves only ``.tmp`` —
+    which must read as 'nothing was ever written', not as a candidate."""
+    root = tmp_path / "rot"
+    (root / "ckpt-000000000001.tmp").mkdir(parents=True)
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(root), _tree())
+
+
+# -- mid-write crash ---------------------------------------------------------
+
+
+def test_midwrite_crash_recovers_previous_entry(tmp_path, monkeypatch):
+    """Kill the writer after its first array file: the save raises, no new
+    entry appears, and the rotation still serves the previous step."""
+    root = str(tmp_path / "rot")
+    big = {"a": jnp.ones((256, 64)), "b": jnp.zeros((256, 64))}  # 2 files
+    save_checkpoint(root, big, step=1, keep_last=3, max_shard_bytes=1 << 14)
+    assert len(os.listdir(os.path.join(root, "ckpt-000000000001"))) == 3
+
+    real_savez = np.savez
+    calls = {"n": 0}
+
+    def dying_savez(*args, **kw):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise OSError("simulated crash: disk gone mid-write")
+        return real_savez(*args, **kw)
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(OSError, match="simulated crash"):
+        save_checkpoint(root, big, step=2, keep_last=3, max_shard_bytes=1 << 14)
+    monkeypatch.undo()
+
+    assert calls["n"] == 2  # it really was mid-entry, not before or after
+    # The torn write left only staging debris, never a loadable entry.
+    names = os.listdir(root)
+    assert "ckpt-000000000002" not in names
+    assert "ckpt-000000000002.tmp" in names
+    restored, step, _ = load_checkpoint(root, big)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), 1.0)
+
+    # A later successful save reclaims the stale staging dir for its step.
+    save_checkpoint(root, big, step=2, keep_last=3, max_shard_bytes=1 << 14)
+    _, step, _ = load_checkpoint(root, big)
+    assert step == 2
+
+
+def test_truncated_file_rejected_and_rotation_falls_back(tmp_path):
+    root = str(tmp_path / "rot")
+    save_checkpoint(root, _tree(1), step=1, keep_last=3)
+    save_checkpoint(root, _tree(2), step=2, keep_last=3)
+    newest = os.path.join(root, "ckpt-000000000002")
+    shard = os.path.join(newest, "shard_0.npz")
+    with open(shard, "rb") as f:
+        blob = f.read()
+    with open(shard, "wb") as f:
+        f.write(blob[: len(blob) // 2])  # torn at half length
+
+    # Loading the torn entry directly names the corruption...
+    with pytest.raises(CheckpointError, match="sha256 mismatch"):
+        load_checkpoint(newest, _tree())
+    # ...and the rotation root silently falls back to the previous entry.
+    restored, step, _ = load_checkpoint(root, _tree())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), 1.0)
+
+
+def test_missing_shard_file_is_a_torn_write(tmp_path):
+    ck = str(tmp_path / "ck")
+    save_checkpoint(ck, _tree(3), step=3)
+    os.remove(os.path.join(ck, "shard_0.npz"))
+    with pytest.raises(CheckpointError, match="missing file"):
+        load_checkpoint(ck, _tree())
+
+
+def test_all_entries_torn_raises_checkpoint_error(tmp_path):
+    """Entries exist but none verifies: that's corruption, not absence."""
+    root = str(tmp_path / "rot")
+    save_checkpoint(root, _tree(1), step=1, keep_last=3)
+    entry = os.path.join(root, "ckpt-000000000001")
+    os.remove(os.path.join(entry, "shard_0.npz"))
+    with pytest.raises(CheckpointError, match="no valid checkpoint"):
+        load_checkpoint(root, _tree())
+
+
+def test_manifest_without_checkpoint_kind_is_rejected(tmp_path):
+    ck = str(tmp_path / "ck")
+    save_checkpoint(ck, _tree(1), step=1)
+    mp = os.path.join(ck, "manifest.json")
+    with open(mp) as f:
+        manifest = json.load(f)
+    manifest["kind"] = "mystery"
+    with open(mp, "w") as f:
+        json.dump(manifest, f)
+    # The manifest edit is a content change too — recompute nothing: the
+    # manifest itself carries no self-hash, so this exercises the kind gate.
+    with pytest.raises(CheckpointError, match="not a pytree checkpoint"):
+        load_checkpoint(ck, _tree())
+
+
+# -- structure verification (the once-dead manifest field, now load-bearing) --
+
+
+def test_structure_digest_catches_extra_and_missing_leaves(tmp_path):
+    ck = str(tmp_path / "ck")
+    save_checkpoint(ck, _tree(), step=0)
+    extra = dict(_tree(), junk=jnp.zeros(3))
+    with pytest.raises(CheckpointError, match="structure mismatch"):
+        load_checkpoint(ck, extra)
+    fewer = {"w": _tree()["w"]}
+    with pytest.raises(CheckpointError, match="structure mismatch"):
+        load_checkpoint(ck, fewer)
+
+
+def test_structure_digest_catches_dtype_change(tmp_path):
+    ck = str(tmp_path / "ck")
+    save_checkpoint(ck, _tree(), step=0)
+    wrong = dict(_tree(), b=jnp.zeros((16,), jnp.float32))  # bf16 -> f32
+    with pytest.raises(CheckpointError, match="dtype"):
+        load_checkpoint(ck, wrong)
+
+
+def test_manifest_records_structure_digest_and_file_hashes(tmp_path):
+    ck = str(tmp_path / "ck")
+    save_checkpoint(ck, _tree(), step=0)
+    with open(os.path.join(ck, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["kind"] == "pytree" and manifest["format"] == 2
+    assert len(manifest["structure"]) == 64  # sha256 hex
+    npz = [n for n in os.listdir(ck) if n.endswith(".npz")]
+    assert sorted(manifest["file_sha256"]) == sorted(npz)
+
+
+# -- shard flush path --------------------------------------------------------
+
+
+def test_single_leaf_larger_than_max_shard_bytes_gets_own_file(tmp_path):
+    """The flush path: one oversized leaf may exceed ``max_shard_bytes``
+    (npz files are per-leaf at minimum) but must not drag later leaves
+    into its file — and the whole thing still round-trips."""
+    tree = {
+        "big": jnp.arange(1 << 18, dtype=jnp.float32),  # 1 MiB
+        "small": jnp.full((4,), 7.0, jnp.float32),
+    }
+    ck = str(tmp_path / "ck")
+    save_checkpoint(ck, tree, max_shard_bytes=1 << 10)
+    shards = sorted(n for n in os.listdir(ck) if n.startswith("shard_"))
+    assert len(shards) == 2
+    sizes = [os.path.getsize(os.path.join(ck, s)) for s in shards]
+    assert max(sizes) > (1 << 20) and min(sizes) < (1 << 12)
+    restored, _, _ = load_checkpoint(ck, tree)
+    np.testing.assert_array_equal(np.asarray(restored["big"]), np.asarray(tree["big"]))
+    np.testing.assert_array_equal(np.asarray(restored["small"]), 7.0)
