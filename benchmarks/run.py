@@ -229,6 +229,34 @@ def _bench_checkpoint(full, rows, record):
            f"n={kw['n']},shards=8,save_s={save_s:.3g},bytes={int(nbytes)}")
 
 
+def _bench_serving(full, rows, record):
+    t0 = time.time()
+    kw = (
+        dict(n=1_000_000, slots=6, slot_wakes=8192.0, batch=1024)
+        if full
+        else dict(n=100_000, slots=4, slot_wakes=2048.0, batch=512)
+    )
+    # Live read path: batched predict() against the newest published
+    # snapshot while the sharded engine trains — predictions/s, p50/p99
+    # batch latency, and the per-super-tick publication cost all join
+    # the summary (served rows are asserted bit-exact in-bench).
+    sub = _subprocess_bench(
+        "benchmarks.bench_serving",
+        ["--n", str(kw["n"]), "--shards", "8",
+         "--slots", str(kw["slots"]), "--slot-wakes", str(kw["slot_wakes"]),
+         "--batch", str(kw["batch"])],
+        "serving_",
+    )
+    rows.extend(sub)
+    rate = next(
+        (v for name, v, _ in sub if name == "serving_predictions_per_s"), None
+    )
+    if rate is None:
+        raise RuntimeError("serving bench printed no serving_predictions_per_s row")
+    record("serving", t0,
+           f"n={kw['n']},shards=8,batch={kw['batch']},predictions_per_s={rate:.4g}")
+
+
 def _bench_roofline(full, rows, record):
     from benchmarks import bench_roofline
 
@@ -257,6 +285,7 @@ BENCHES = {
     "obs": _bench_obs,
     "dynamic_topology": _bench_dynamic_topology,
     "checkpoint": _bench_checkpoint,
+    "serving": _bench_serving,
     "roofline": _bench_roofline,
 }
 

@@ -1,105 +1,33 @@
-"""Batched serving driver: prefill a prompt batch, decode N tokens.
+"""Deprecated location — the serving CLI lives at ``repro.serve``.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --preset tiny --batch 4 --prompt-len 64 --decode-tokens 32
+The LLM prefill/decode driver that used to live here was unrelated to
+this paper and is gone; the serving tier is now the personalized
+peer-to-peer inference path:
+
+    PYTHONPATH=src python -m repro.serve --checkpoint-dir ckpts
+    PYTHONPATH=src python -m repro.serve --live --n 20000 --shards 8
+
+This stub forwards ``main`` to :mod:`repro.serve.__main__` with a
+DeprecationWarning so old entry points keep resolving.
 """
 
 from __future__ import annotations
 
-import argparse
-import json
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import ARCH_IDS, get_config, get_reduced
-from repro.models import build_model
-from repro.models.encdec import enc_len
+import warnings
 
 
-def parse_args(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_IDS)
-    ap.add_argument("--preset", default="tiny", choices=["tiny", "small", "full"])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--decode-tokens", type=int, default=32)
-    ap.add_argument("--max-len", type=int, default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--greedy", action="store_true", default=True)
-    return ap.parse_args(argv)
-
-
-def main(argv=None):
-    args = parse_args(argv)
-    if args.preset == "full":
-        cfg = get_config(args.arch)
-    elif args.preset == "small":
-        cfg = get_reduced(args.arch, num_layers=2, d_model=256, d_ff=512,
-                          vocab_size=2048, dtype="float32")
-    else:
-        cfg = get_reduced(args.arch, dtype="float32")
-    bundle = build_model(cfg, remat=False)
-    key = jax.random.PRNGKey(args.seed)
-    params = bundle.init(key)
-    max_len = args.max_len or (args.prompt_len + args.decode_tokens)
-
-    rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+def main(argv=None) -> int:
+    """Forward to ``python -m repro.serve`` (deprecated path)."""
+    warnings.warn(
+        "repro.launch.serve is deprecated; use `python -m repro.serve` "
+        "(repro.serve.__main__.main) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    from repro.serve.__main__ import main as serve_main
 
-    t0 = time.time()
-    if bundle.prefill is not None and not cfg.is_encdec and cfg.family not in ("hybrid", "ssm"):
-        from repro.models import transformer
-
-        prefill = jax.jit(lambda p, t: transformer.prefill(p, t, cfg, max_len=max_len))
-        logits, caches = prefill(params, prompts)
-        pos0 = args.prompt_len
-    elif cfg.is_encdec:
-        from repro.models import encdec
-
-        embeds = jax.random.normal(
-            key, (args.batch, enc_len(args.prompt_len), cfg.d_model), jnp.float32
-        )
-        prefill = jax.jit(lambda p, e, t: encdec.prefill(p, e, t, cfg, max_len=max_len))
-        logits, caches = prefill(params, embeds, prompts)
-        pos0 = args.prompt_len
-    else:
-        # recurrent families: run the prompt token-by-token through decode
-        caches = bundle.init_cache(params, args.batch, max_len)
-        decode = jax.jit(bundle.decode)
-        logits = None
-        for i in range(args.prompt_len):
-            logits, caches = decode(params, prompts[:, i : i + 1], caches, jnp.int32(i))
-        pos0 = args.prompt_len
-    t_prefill = time.time() - t0
-
-    decode = jax.jit(bundle.decode)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    tok = jnp.clip(tok, 0, cfg.vocab_size - 1)
-    out_tokens = [np.asarray(tok)]
-    t1 = time.time()
-    for i in range(args.decode_tokens - 1):
-        logits, caches = decode(params, tok, caches, jnp.int32(pos0 + i))
-        tok = jnp.clip(jnp.argmax(logits, axis=-1).astype(jnp.int32), 0, cfg.vocab_size - 1)
-        out_tokens.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t1
-
-    toks_per_s = args.batch * (args.decode_tokens - 1) / max(t_decode, 1e-9)
-    print(json.dumps({
-        "arch": args.arch, "preset": args.preset, "batch": args.batch,
-        "prompt_len": args.prompt_len, "decode_tokens": args.decode_tokens,
-        "prefill_s": round(t_prefill, 3), "decode_s": round(t_decode, 3),
-        "decode_tokens_per_s": round(toks_per_s, 1),
-    }))
-    gen = np.concatenate(out_tokens, axis=1)
-    print("sample generated ids:", gen[0][:16].tolist())
-    return gen
+    return serve_main(argv)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -16,10 +16,12 @@ Three layers, importable in any combination:
 """
 
 from repro.obs.metrics import (
+    SERVE_COUNTERS,
     TOPOLOGY_COUNTERS,
     ExchangeVolume,
     MetricsAccumulator,
     MetricsSpec,
+    serve_counters_init,
     summarize_counters,
     topology_log_init,
 )
@@ -32,6 +34,7 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "SERVE_COUNTERS",
     "TOPOLOGY_COUNTERS",
     "ExchangeVolume",
     "MetricsAccumulator",
@@ -41,6 +44,7 @@ __all__ = [
     "SpanRecorder",
     "merge_bench_summary",
     "profile_supertick",
+    "serve_counters_init",
     "summarize_counters",
     "topology_log_init",
     "validate_trace",

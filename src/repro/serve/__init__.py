@@ -1,0 +1,38 @@
+"""``repro.serve`` — the online personalized serving tier.
+
+Versioned snapshot publication plus batched personalized inference over
+the training swarm: a :class:`ServeHandle` answers
+``predict(agent_ids, X)`` against the latest published Theta version —
+live (``engine.run(..., snapshot_every=, serve=handle)``) or offline
+from a ``repro.checkpoint`` entry (:func:`serve_from_checkpoint`) —
+with an Eq. 16 neighbour-average cold-start tier for ids not yet in the
+swarm. ``python -m repro.serve`` fronts both modes from the command
+line.
+
+Exports resolve lazily (PEP 562) so the CLI can pin XLA device flags
+before anything imports jax.
+"""
+
+__all__ = [
+    "ServeHandle",
+    "ServeResult",
+    "ServeSpec",
+    "SnapshotStore",
+    "ThetaSnapshot",
+    "serve_from_checkpoint",
+]
+
+_HANDLE = ("ServeHandle", "ServeResult", "ServeSpec", "SnapshotStore", "ThetaSnapshot")
+
+
+def __getattr__(name: str):
+    """Lazy re-export from the implementation modules."""
+    if name in _HANDLE:
+        from repro.serve import handle
+
+        return getattr(handle, name)
+    if name == "serve_from_checkpoint":
+        from repro.serve.checkpoint_io import serve_from_checkpoint
+
+        return serve_from_checkpoint
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")

@@ -1,0 +1,141 @@
+"""Read-only serving from a ``repro.checkpoint`` engine entry.
+
+The same :class:`~repro.serve.handle.ServeHandle` API that fronts a
+live engine can front a finished or crash-recovered run: resolve the
+newest verified entry in a rotation directory (per-file sha256 gates,
+torn-entry fallback — the crash-safety recipe from ``repro.checkpoint``
+unchanged), gate on the saved engine fingerprint, and stream the
+per-shard theta blocks one file at a time into a fresh ``(S, R, p)``
+tile stack. The ownership routing is rebuilt from each shard file's own
+original-id list, so no graph, partition object, or ``(n, p)`` gather
+is ever needed — serving a checkpoint costs exactly one pass over the
+shard files it contains.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (
+    CheckpointError,
+    _from_numpy,
+    _load_arrays,
+    _resolve_entry,
+)
+from repro.checkpoint.engine_io import _load_file
+from repro.serve.handle import ServeHandle, ServeSpec, SnapshotStore, ThetaSnapshot
+
+
+def _check_expected(entry: str, saved: dict, expect: dict | None) -> None:
+    """Reject a serve request whose caller expects a different swarm.
+
+    ``expect`` is any subset of the saved ``engine_fingerprint`` keys
+    (``n``, ``p``, ``dtype``, ``engine``, ``graph``, ...); every named
+    key must match exactly — same error shape as the restore-side
+    ``_check_fingerprint``.
+    """
+    if not expect:
+        return
+    for key in sorted(expect):
+        if saved.get(key) != expect[key]:
+            raise CheckpointError(
+                f"{entry}: fingerprint mismatch on {key!r}: checkpoint has "
+                f"{saved.get(key)!r}, caller expects {expect[key]!r}"
+            )
+
+
+def _pending_of(entry: str, fp: dict) -> frozenset:
+    if not fp.get("dynamic"):
+        return frozenset()
+    topo = _load_file(entry, "topology.npz")
+    return frozenset(int(i) for i in topo["pending"])
+
+
+def _async_snapshot(entry: str, manifest: dict) -> ThetaSnapshot:
+    """Theta of an ``AsyncEngine`` entry as a single (1, n, p) tile."""
+    by_path = {r["path"]: r for r in manifest["leaves"]}
+    rec = by_path[".Theta"]
+    data = _load_arrays(entry, manifest)
+    theta = _from_numpy(data[rec["key"]], rec["dtype"])
+    return ThetaSnapshot(
+        version=int(manifest["step"]),
+        tiles=jnp.asarray(theta)[None],
+        shard_of=None,
+        local_of=None,
+        pending=_pending_of(entry, manifest["fingerprint"]),
+    )
+
+
+def _sharded_snapshot(entry: str, manifest: dict) -> ThetaSnapshot:
+    """Stream shard files into an (S, R, p) tile stack + ownership maps.
+
+    One shard file is resident at a time; each block lands at the local
+    rows its saved original-id list dictates, and those same ids define
+    ``shard_of``/``local_of`` — the serving layout is self-describing,
+    independent of the partition mode that produced the checkpoint.
+    """
+    fp = manifest["fingerprint"]
+    S, n, p = int(fp["num_shards"]), int(fp["n"]), int(fp["p"])
+    sizes = _load_file(entry, "partition.npz")["sizes"]
+    R = int(np.max(sizes))
+    bf16 = set(manifest.get("bf16", []))
+    shard_of = np.full(n, -1, dtype=np.int32)
+    local_of = np.zeros(n, dtype=np.int32)
+    tiles = None
+    for s in range(S):
+        fname = f"shard_{s}.npz"
+        arrs = _load_file(entry, fname)
+        ids = np.asarray(arrs["ids"], dtype=np.int64)
+        theta = _from_numpy(
+            arrs["theta"],
+            "bfloat16" if f"{fname}/theta" in bf16 else str(arrs["theta"].dtype),
+        )
+        if tiles is None:
+            tiles = np.zeros((S, R, p), dtype=theta.dtype)
+        tiles[s, : ids.size] = theta
+        shard_of[ids] = s
+        local_of[ids] = np.arange(ids.size, dtype=np.int32)
+    if tiles is None or (shard_of < 0).any():
+        raise CheckpointError(f"{entry}: shard files do not cover all {n} agents")
+    return ThetaSnapshot(
+        version=int(manifest["step"]),
+        tiles=jnp.asarray(tiles),
+        shard_of=shard_of,
+        local_of=local_of,
+        pending=_pending_of(entry, fp),
+    )
+
+
+def serve_from_checkpoint(
+    path: str, spec: ServeSpec | None = None, expect_fingerprint: dict | None = None
+) -> ServeHandle:
+    """A read-only :class:`ServeHandle` over a checkpointed swarm.
+
+    ``path`` is a rotation directory or a single entry (same resolution
+    as ``repro.checkpoint.restore``: newest sha256-verified entry wins,
+    torn entries fall back). Non-engine checkpoints are rejected, and
+    ``expect_fingerprint`` lets the caller pin any subset of the saved
+    engine fingerprint (``{"n": ..., "dtype": ...}``) before serving a
+    single prediction. The handle's snapshot version is the saved step;
+    ``publish`` raises — train-side publication needs a live engine.
+    """
+    entry, manifest = _resolve_entry(path)
+    if manifest.get("kind") != "engine":
+        raise CheckpointError(
+            f"{entry}: not an engine checkpoint (kind={manifest.get('kind')!r}); "
+            "serve_from_checkpoint needs a save_engine_checkpoint entry"
+        )
+    fp = manifest["fingerprint"]
+    _check_expected(entry, fp, expect_fingerprint)
+    spec = ServeSpec.coerce(spec)
+    if fp["engine"] == "sharded":
+        snap = _sharded_snapshot(entry, manifest)
+    else:
+        snap = _async_snapshot(entry, manifest)
+    store = SnapshotStore(spec.buffers)
+    store.publish(snap)
+    handle = ServeHandle(store, spec, n=int(fp["n"]), p=int(fp["p"]))
+    with handle._lock:
+        handle._counters["serve_snapshots_published"] += 1
+    return handle

@@ -166,6 +166,100 @@ def _event_stride(events, default: int) -> int:
     return math.gcd(*periods) if periods else default
 
 
+def _run_driver(
+    engine,
+    Theta0,
+    slots: int,
+    *,
+    record_every: int = 0,
+    state=None,
+    metrics_every: int = 0,
+    report=None,
+    checkpoint_every: int = 0,
+    checkpoint_dir: str | None = None,
+    checkpoint_keep_last: int = 3,
+    snapshot_every: int = 0,
+    serve=None,
+):
+    """The one run loop behind both engines' ``run()`` methods.
+
+    Validates the periodic-side-effect arguments (identical error
+    messages from either engine), registers each requested side effect
+    as an ``(every, callback)`` event — objective recording, metric
+    drains into a :class:`repro.obs.RunReport`, crash-safe checkpoints,
+    and serving-snapshot publication into a
+    :class:`repro.serve.ServeHandle` — then drives the slots through
+    the static chunked driver or the dynamic segment driver. Returns
+    ``(state, objective, report)``; each engine assembles its own
+    :class:`SimResult` from them.
+
+    When serving is on, the handle also publishes once *before* the
+    first slot, so readers have a (version = starting slot) snapshot
+    during the first ``snapshot_every`` slots of a live run.
+    """
+    _check_recordable(engine.update, record_every)
+    if metrics_every > 0 and engine._macc is None:
+        raise ValueError(
+            "metrics_every requires metrics collection on; construct the "
+            "engine with EngineConfig(metrics=True) (or a MetricsSpec)"
+        )
+    if (checkpoint_every > 0) != (checkpoint_dir is not None):
+        raise ValueError(
+            "checkpoint_every and checkpoint_dir come together: pass both "
+            "(periodic checkpoints) or neither"
+        )
+    if (snapshot_every > 0) != (serve is not None):
+        raise ValueError(
+            "snapshot_every and serve come together: pass both (a "
+            "repro.serve.ServeHandle receiving the published snapshots) "
+            "or neither"
+        )
+    state = engine.init_state(Theta0) if state is None else state
+    record = record_every > 0
+    objective = [engine._objective_value(state)] if record else None
+    if metrics_every > 0 and report is None:
+        from repro.obs.report import RunReport
+
+        report = RunReport(meta=engine.report_meta())
+    events = []
+    if record:
+        events.append(
+            (record_every, lambda s: objective.append(engine._objective_value(s)))
+        )
+    if metrics_every > 0:
+
+        def _drain(s):
+            counters, derived = engine.metrics_snapshot(s)
+            report.add_snapshot(engine._ptr_of(s), counters, derived)
+
+        events.append((metrics_every, _drain))
+    if checkpoint_every > 0:
+        from repro.checkpoint.engine_io import save_engine_checkpoint
+
+        events.append(
+            (
+                checkpoint_every,
+                lambda s: save_engine_checkpoint(
+                    engine, s, checkpoint_dir, keep_last=checkpoint_keep_last
+                ),
+            )
+        )
+    if snapshot_every > 0:
+        serve.publish(state)
+        events.append((snapshot_every, serve.publish))
+    if engine.dynamic:
+        state = _drive_dynamic(engine, state, slots, events, engine.advance)
+    else:
+        state = _drive_slots(
+            state,
+            slots,
+            _event_stride(events, engine.steps_per_chunk),
+            engine.advance,
+            events,
+        )
+    return state, objective, report
+
+
 # ---------------------------------------------------------------------------
 # Dynamic-topology host helpers (shared by both engines)
 # ---------------------------------------------------------------------------
@@ -944,6 +1038,10 @@ class AsyncEngine:
             return self._chunk_dyn(state, self._dyn, int(slots))
         return self._chunk(state, int(slots))
 
+    def _objective_value(self, state: SimState) -> float:
+        """The update's objective at ``state`` (recording hook)."""
+        return self.update.objective(state.Theta)
+
     def run(
         self,
         Theta0,
@@ -955,6 +1053,8 @@ class AsyncEngine:
         checkpoint_every: int = 0,
         checkpoint_dir: str | None = None,
         checkpoint_keep_last: int = 3,
+        snapshot_every: int = 0,
+        serve=None,
     ) -> SimResult:
         """Drive ``slots`` super-ticks from ``Theta0`` (or a resumed state).
 
@@ -971,65 +1071,29 @@ class AsyncEngine:
         ``checkpoint_keep_last`` entries kept) every that many slots and
         once at the end; resume via
         ``repro.checkpoint.restore(engine, checkpoint_dir)`` +
-        ``run(..., state=...)``.
+        ``run(..., state=...)``. ``snapshot_every`` > 0 publishes a
+        version-tagged serving snapshot into the paired ``serve=``
+        :class:`repro.serve.ServeHandle` every that many slots (plus
+        once at the start and once at the end), so batched ``predict``
+        readers lag the trainer by at most ``snapshot_every`` slots.
+        All three periodic arguments share one event loop — see
+        ``_run_driver``.
         """
-        _check_recordable(self.update, record_every)
-        if metrics_every > 0 and self._macc is None:
-            raise ValueError(
-                "metrics_every requires metrics collection on; construct the "
-                "engine with EngineConfig(metrics=True) (or a MetricsSpec)"
-            )
-        if (checkpoint_every > 0) != (checkpoint_dir is not None):
-            raise ValueError(
-                "checkpoint_every and checkpoint_dir come together: pass both "
-                "(periodic checkpoints) or neither"
-            )
-        state = self.init_state(Theta0) if state is None else state
+        state, objective, report = _run_driver(
+            self,
+            Theta0,
+            slots,
+            record_every=record_every,
+            state=state,
+            metrics_every=metrics_every,
+            report=report,
+            checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_keep_last=checkpoint_keep_last,
+            snapshot_every=snapshot_every,
+            serve=serve,
+        )
         record = record_every > 0
-        objective = [self.update.objective(state.Theta)] if record else None
-        if metrics_every > 0 and report is None:
-            from repro.obs.report import RunReport
-
-            report = RunReport(meta=self.report_meta())
-        events = []
-        if record:
-            events.append(
-                (record_every, lambda s: objective.append(self.update.objective(s.Theta)))
-            )
-        if metrics_every > 0:
-
-            def _drain(s):
-                counters, derived = self.metrics_snapshot(s)
-                report.add_snapshot(int(s.ptr), counters, derived)
-
-            events.append((metrics_every, _drain))
-        if checkpoint_every > 0:
-            from repro.checkpoint.engine_io import save_engine_checkpoint
-
-            events.append(
-                (
-                    checkpoint_every,
-                    lambda s: save_engine_checkpoint(
-                        self, s, checkpoint_dir, keep_last=checkpoint_keep_last
-                    ),
-                )
-            )
-        if self.dynamic:
-            state = _drive_dynamic(
-                self,
-                state,
-                slots,
-                events,
-                lambda s, steps: self._chunk_dyn(s, self._dyn, steps),
-            )
-        else:
-            state = _drive_slots(
-                state,
-                slots,
-                _event_stride(events, self.steps_per_chunk),
-                self._chunk,
-                events,
-            )
         return SimResult(
             Theta=np.asarray(state.Theta),
             objective=np.asarray(objective) if record else None,
@@ -1883,6 +1947,10 @@ class ShardedAsyncEngine:
         """Reassemble the (n, p) model matrix from the shard blocks."""
         return self.part.unpad_rows(np.asarray(state.Theta))
 
+    def _objective_value(self, state: ShardedSimState) -> float:
+        """The update's objective at ``state`` (recording hook)."""
+        return self.update.objective(self.global_theta(state))
+
     def run(
         self,
         Theta0,
@@ -1894,70 +1962,25 @@ class ShardedAsyncEngine:
         checkpoint_every: int = 0,
         checkpoint_dir: str | None = None,
         checkpoint_keep_last: int = 3,
+        snapshot_every: int = 0,
+        serve=None,
     ) -> SimResult:
         """Drive ``slots`` super-ticks; same contract as :meth:`AsyncEngine.run`."""
-        _check_recordable(self.update, record_every)
-        if metrics_every > 0 and self._macc is None:
-            raise ValueError(
-                "metrics_every requires metrics collection on; construct the "
-                "engine with EngineConfig(metrics=True) (or a MetricsSpec)"
-            )
-        if (checkpoint_every > 0) != (checkpoint_dir is not None):
-            raise ValueError(
-                "checkpoint_every and checkpoint_dir come together: pass both "
-                "(periodic checkpoints) or neither"
-            )
-        state = self.init_state(Theta0) if state is None else state
+        state, objective, report = _run_driver(
+            self,
+            Theta0,
+            slots,
+            record_every=record_every,
+            state=state,
+            metrics_every=metrics_every,
+            report=report,
+            checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_keep_last=checkpoint_keep_last,
+            snapshot_every=snapshot_every,
+            serve=serve,
+        )
         record = record_every > 0
-        objective = [self.update.objective(self.global_theta(state))] if record else None
-        if metrics_every > 0 and report is None:
-            from repro.obs.report import RunReport
-
-            report = RunReport(meta=self.report_meta())
-        events = []
-        if record:
-            events.append(
-                (
-                    record_every,
-                    lambda s: objective.append(
-                        self.update.objective(self.global_theta(s))
-                    ),
-                )
-            )
-        if metrics_every > 0:
-
-            def _drain(s):
-                counters, derived = self.metrics_snapshot(s)
-                report.add_snapshot(int(np.asarray(s.ptr)[0]), counters, derived)
-
-            events.append((metrics_every, _drain))
-        if checkpoint_every > 0:
-            from repro.checkpoint.engine_io import save_engine_checkpoint
-
-            events.append(
-                (
-                    checkpoint_every,
-                    lambda s: save_engine_checkpoint(
-                        self, s, checkpoint_dir, keep_last=checkpoint_keep_last
-                    ),
-                )
-            )
-        if self.dynamic:
-            state = _drive_dynamic(
-                self,
-                state,
-                slots,
-                events,
-                lambda s, steps: self._chunk(s, self._static, steps),
-            )
-        else:
-            state = _drive_slots(
-                state,
-                slots,
-                _event_stride(events, self.steps_per_chunk),
-                lambda s, steps: self._chunk(s, self._static, steps),
-                events,
-            )
         part = self.part
         return SimResult(
             Theta=self.global_theta(state),
